@@ -1,0 +1,78 @@
+"""Paper Figures 5-8 analogs: top-k sweep, XASH component ablation,
+key-size scaling, initial-column selection."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import discovery
+
+
+def fig5_topk():
+    print("# Fig 5 analog: precision vs k")
+    queries = common.query_group(common.ROWS["webtable(100)"])
+    for h in ("xash", "bf", "ht"):
+        idx = common.index(h, 128)
+        for k in (2, 5, 10, 20):
+            _, st = common.run_discovery(idx, queries, k=k)
+            common.emit(
+                f"f5/{h}/k={k}", 0.0, f"precision={st['precision_mean']:.3f}"
+            )
+
+
+def fig6_ablation():
+    print("# Fig 6 analog: XASH component ablation")
+    queries = common.query_group(common.ROWS["webtable(100)"])
+    variants = [
+        ("char", dict(use_location=False, use_length=False, use_rotation=False)),
+        ("char+len", dict(use_location=False, use_length=True, use_rotation=False)),
+        ("char+len+loc", dict(use_location=True, use_length=True, use_rotation=False)),
+        ("xash(full)", dict()),
+    ]
+    for name, kw in variants:
+        idx = common.index("xash", 128, **kw)
+        _, st = common.run_discovery(idx, queries)
+        common.emit(
+            f"f6/{name}", 0.0,
+            f"precision={st['precision_mean']:.3f};fp={st['fp']}"
+        )
+
+
+def fig7_keysize():
+    print("# Fig 7 analog: composite-key width 2..5")
+    for width in (2, 3, 4, 5):
+        queries = common.query_group(40, key_width=width)
+        idx = common.index("xash", 128)
+        dt, st = common.run_discovery(idx, queries)
+        common.emit(
+            f"f7/xash/|Q|={width}", dt / max(len(queries), 1) * 1e6,
+            f"precision={st['precision_mean']:.3f};fp={st['fp']}"
+        )
+
+
+def fig8_initcol():
+    print("# Fig 8 analog: initial-column strategy → PL items fetched")
+    queries = common.query_group(common.ROWS["webtable(100)"])
+    idx = common.index("xash", 128)
+    for mode in ("cardinality", "order", "tls", "best", "worst"):
+        fetched = []
+        for q, q_cols in queries:
+            col = discovery.init_column_selection(q, q_cols, mode, idx)
+            fetched.append(
+                sum(len(idx.fetch_postings(v)) for v in set(q.column(col)))
+            )
+        common.emit(f"f8/{mode}", 0.0, f"avg_pl_items={np.mean(fetched):.1f}")
+
+
+def main():
+    fig5_topk()
+    fig6_ablation()
+    fig7_keysize()
+    fig8_initcol()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks (interpret-mode wall clock on CPU is NOT a TPU
+number — the derived column carries the structural throughput metrics that
+transfer: bytes/row touched, probes per byte; see EXPERIMENTS.md §Roofline
+for the device-level analysis) + batched-vs-sequential engine comparison."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import discovery, xash
+from repro.core.batched import discover_batched
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def kernels():
+    print("# kernel microbench (interpret mode)")
+    cfg = xash.DEFAULT_CONFIG
+    enc = RNG.integers(0, 38, size=(4096, 6, 48)).astype(np.uint8)
+    dt = _time(ops.superkey, enc, cfg)
+    common.emit(
+        "kern/xash_superkey_4096x6", dt * 1e6,
+        f"rows_per_s={4096/dt:,.0f};bytes_per_row={6*48+16}"
+    )
+    row_sk = np.asarray(ref.xash_superkey_ref(enc, cfg))
+    q_sk = row_sk[:256]
+    dt = _time(ops.filter_count, row_sk, q_sk)
+    probes = row_sk.shape[0] * q_sk.shape[0]
+    common.emit(
+        "kern/filter_count_4096x256", dt * 1e6,
+        f"probes_per_s={probes/dt:,.0f};bytes_per_probe={2*16/256:.3f}"
+    )
+    dt_ref = _time(
+        lambda: np.asarray(ref.filter_count_ref(row_sk, q_sk))
+    )
+    common.emit(
+        "kern/filter_count_jnp_ref", dt_ref * 1e6,
+        f"kernel_vs_ref={dt_ref/dt:.2f}x"
+    )
+
+
+def engines():
+    print("# engine comparison: SCI vs MATE(seq) vs MATE(batched)")
+    queries = common.query_group(common.ROWS["webtable(100)"])
+    idx = common.index("xash", 128)
+    t_sci, _ = common.run_discovery(idx, queries, row_filter=False)
+    t_seq, _ = common.run_discovery(idx, queries)
+    t_bat, stb = common.run_discovery(idx, queries, engine="batched")
+    n = len(queries)
+    common.emit("engine/sci", t_sci / n * 1e6, "row_filter=off")
+    common.emit("engine/mate_seq", t_seq / n * 1e6, f"vs_sci={t_sci/t_seq:.2f}x")
+    common.emit(
+        "engine/mate_batched", t_bat / n * 1e6,
+        f"vs_sci={t_sci/t_bat:.2f}x;vs_seq={t_seq/t_bat:.2f}x"
+    )
+
+
+def main():
+    kernels()
+    engines()
+
+
+if __name__ == "__main__":
+    main()

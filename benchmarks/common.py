@@ -1,0 +1,86 @@
+"""Shared benchmark fixtures: corpus, query groups, index cache, timing."""
+
+from __future__ import annotations
+
+import sys
+import time
+from functools import lru_cache
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+import numpy as np
+
+from repro.core import discovery, xash
+from repro.core.batched import discover_batched
+from repro.core.index import MateIndex
+from repro.data import synthetic
+
+SEED = 3
+N_TABLES = 500
+ROWS = {"webtable(10)": 10, "webtable(100)": 100}
+N_QUERIES = 4
+K = 10
+
+
+@lru_cache(maxsize=1)
+def corpus():
+    return synthetic.make_corpus(
+        synthetic.SyntheticSpec(n_tables=N_TABLES, seed=SEED)
+    )
+
+
+@lru_cache(maxsize=None)
+def index(hash_name: str = "xash", bits: int = 128, **xash_kw):
+    c = corpus()
+    if hash_name == "xash":
+        kw = dict(xash_kw)
+        cfg = xash.XashConfig(
+            bits=bits, char_freq=tuple(c.char_frequencies().tolist()), **kw
+        )
+        return MateIndex(c, cfg=cfg)
+    return MateIndex(c, cfg=xash.XashConfig(bits=bits), hash_name=hash_name)
+
+
+@lru_cache(maxsize=None)
+def query_group(n_rows: int, key_width: int = 2):
+    return tuple(
+        synthetic.make_mixed_queries(
+            corpus(), N_QUERIES, n_rows, key_width, seed=SEED + 2
+        )
+    )
+
+
+def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
+    """Returns (seconds_total, aggregate stats)."""
+    tp = fp = checks = passed = 0
+    precs = []
+    t0 = time.perf_counter()
+    for q, q_cols in queries:
+        if engine == "batched":
+            # use_kernel=False: on CPU the Pallas interpret path adds per-call
+            # overhead; the numpy filter is the fair wall-clock proxy here
+            _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=False)
+        else:
+            _, st = discovery.discover(idx, q, q_cols, k=k, row_filter=row_filter)
+        tp += st.verified_tp
+        fp += st.verified_fp
+        checks += st.filter_checks
+        passed += st.filter_passed
+        precs.append(st.precision)
+    dt = time.perf_counter() - t0
+    return dt, {
+        "tp": tp,
+        "fp": fp,
+        "checks": checks,
+        "passed": passed,
+        "precision_mean": float(np.mean(precs)),
+        "precision_std": float(np.std(precs)),
+    }
+
+
+ROWS_CSV = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS_CSV.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,141 @@
+"""Roofline builder: reads results/dryrun/*.json → §Roofline table.
+
+Per (arch × shape × mesh):
+  compute    = corrected HLO flops/device ÷ 197 TFLOP/s (bf16, v5e)
+  memory     = HLO bytes-accessed/device ÷ 819 GB/s
+  collective = corrected collective bytes/device ÷ 50 GB/s/link
+(bytes-accessed falls back to param+arg traffic when XLA omits it on CPU)
+plus MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the useful-flops
+ratio.  Emits markdown (EXPERIMENTS.md §Roofline) and a CSV for run.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from repro.launch.mesh import V5E
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """Analytic useful flops per device per step."""
+    n_active = rec["params_active"]
+    chips = rec["n_chips"]
+    if rec["kind"] == "filter":  # mate-filter: 8 int-ops per (row × key) probe
+        return rec.get("probe_ops", 0.0) / chips
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * rec["global_batch"] / chips
+
+
+def load_cells(variant: str | None = None, out_dir: str = RESULTS) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        stem = os.path.basename(path)[: -len(".json")]
+        parts = stem.split("__")
+        v = parts[3] if len(parts) > 3 else "baseline"
+        if variant is not None and v != variant:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_file"] = stem
+        rec["_variant"] = v
+        cells.append(rec)
+    return cells
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("skipped") or "error" in rec:
+        return None
+    hc = rec.get("hlo_cost") or {}
+    flops = hc.get("flops") or 0.0
+    # bytes accessed: XLA cost analysis key (per device); CPU backend reports
+    # it under 'bytes accessed'; fall back to args+outputs+temp traffic.
+    ca = rec.get("cost_analysis") or {}
+    bytes_acc = ca.get("bytes accessed")
+    if bytes_acc is None:
+        ma = rec.get("memory_analysis") or {}
+        bytes_acc = sum(
+            ma.get(k, 0)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")
+        )
+    coll = hc.get("collective_bytes_total") or 0.0
+    t_compute = flops / V5E["peak_flops_bf16"]
+    t_memory = bytes_acc / V5E["hbm_bw"]
+    t_coll = coll / V5E["ici_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "variant": rec["_variant"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_frac": (
+            mf / V5E["peak_flops_bf16"] / max(t_compute, t_memory, t_coll)
+            if max(t_compute, t_memory, t_coll) > 0
+            else 0.0
+        ),
+        "mem_temp_gb": (rec.get("memory_analysis") or {}).get(
+            "temp_size_in_bytes", 0
+        ) / 1e9,
+        "compile_s": rec.get("compile_seconds"),
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful flops | roofline frac | temp GB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['mem_temp_gb']:.1f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main():
+    cells = load_cells(variant="baseline")
+    rows = [t for t in (terms(c) for c in cells) if t]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows))
+    skipped = [c for c in cells if c.get("skipped")]
+    errored = [c for c in cells if "error" in c]
+    print(f"\n{len(rows)} cells, {len(skipped)} documented skips, "
+          f"{len(errored)} errors")
+    for c in skipped:
+        print(f"  SKIP {c['_file']}: {c['reason'][:70]}")
+    for c in errored:
+        print(f"  ERR  {c['_file']}")
+
+
+if __name__ == "__main__":
+    main()

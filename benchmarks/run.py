@@ -1,0 +1,53 @@
+"""Benchmark harness: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+prints ``name,us_per_call,derived`` CSV rows (plus section comments), then a
+roofline summary if dry-run results exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip 512-bit builds")
+    args = ap.parse_args()
+
+    from benchmarks import bench_figures, bench_kernels, bench_tables, common
+
+    if args.quick:
+        bench_tables.HASHES_512 = []
+        bench_tables.HASHES_128 = ["murmur", "ht", "bf", "xash"]
+
+    print("name,us_per_call,derived")
+    bench_tables.main()
+    bench_figures.main()
+    bench_kernels.main()
+
+    # roofline summary (requires results/dryrun/*.json from the dry-run)
+    try:
+        from benchmarks import roofline
+
+        cells = roofline.load_cells(variant="baseline")
+        rows = [t for t in (roofline.terms(c) for c in cells) if t]
+        if rows:
+            by_dom = {}
+            for r in rows:
+                by_dom.setdefault(r["dominant"], []).append(r)
+            for dom, rs in sorted(by_dom.items()):
+                common.emit(
+                    f"roofline/{dom}-bound-cells", 0.0,
+                    f"count={len(rs)};median_frac="
+                    f"{sorted(x['roofline_frac'] for x in rs)[len(rs)//2]:.3f}"
+                )
+    except Exception as e:  # dry-run not yet executed
+        print(f"# roofline summary unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: MATE in five minutes.
+
+Builds a small synthetic data lake, indexes it with XASH super keys, runs
+top-k multi-attribute join discovery, and shows the filtering statistics the
+paper is about.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from repro.core import discovery
+from repro.core.index import MateIndex
+from repro.data import synthetic
+
+
+def main():
+    # 1. a synthetic "data lake" with webtable-like statistics
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=200, seed=0))
+    print(f"lake: {len(corpus.tables)} tables, {corpus.total_rows} rows, "
+          f"{len(corpus.unique_values)} unique values")
+
+    # 2. offline phase: inverted index + XASH super keys
+    index = MateIndex(corpus, use_corpus_char_freq=True)
+    print(f"indexed with {index.cfg.bits}-bit XASH "
+          f"(c={index.cfg.c}, ones={index.cfg.ones})")
+
+    # 3. a query table with a 2-column composite key, with known joins
+    query, q_cols, expected, corpus2 = synthetic.make_query_with_ground_truth(
+        corpus, n_rows=20, key_width=2, n_joinable_tables=6
+    )
+    index = MateIndex(corpus2, use_corpus_char_freq=True)  # rebuilt post-injection
+
+    # 4. online phase: top-k n-ary join discovery (Algorithm 1)
+    topk, stats = discovery.discover(index, query, q_cols, k=5)
+    print("\ntop-5 joinable tables (table_id, joinability, column mapping):")
+    for e in topk:
+        print(f"  table {e.table_id:4d}  j={e.joinability:3d}  mapping={e.mapping}")
+    print(f"\nexpected ≥: {dict(sorted(expected.items(), key=lambda kv: -kv[1])[:5])}")
+    print(
+        f"stats: {stats.pl_items_total} PL items fetched, "
+        f"{stats.filter_checks} super-key probes, "
+        f"{stats.filter_passed} passed, precision={stats.precision:.3f}, "
+        f"rule1-pruned={stats.tables_pruned_rule1} tables"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving example: slot-batched prefill+decode with the engine.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-1.3b]
+
+Runs the reduced config of any assigned architecture (attention KV caches,
+MLA latent caches and SSM states all flow through the same cache pytree).
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import stub_inputs
+from repro.models import params as params_lib, transformer
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = configs.reduce_config(configs.get_config(args.arch))
+    params = params_lib.materialize(
+        transformer.model_specs(cfg), jax.random.PRNGKey(0)
+    )
+    engine = ServeEngine(
+        params, cfg, batch=args.batch, max_seq=64,
+        temperature=args.temperature, extra_inputs=stub_inputs(cfg, args.batch),
+    )
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(prompt=list(rng.integers(2, cfg.vocab_size, rng.integers(3, 12))),
+                max_new=args.max_new)
+        for _ in range(args.requests)
+    ]
+    t0 = time.time()
+    done = engine.generate(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out) for r in done)
+    print(f"{cfg.name}: {len(done)} requests, {n_tok} new tokens, "
+          f"{n_tok/dt:.1f} tok/s (CPU, reduced config)")
+    for i, r in enumerate(done[:4]):
+        print(f"  req{i}: prompt={r.prompt[:5]}... -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

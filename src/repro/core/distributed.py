@@ -1,0 +1,133 @@
+"""Distributed MATE discovery: corpus sharded over the device mesh.
+
+The filtering layer (the paper's hot loop) is embarrassingly parallel over
+candidate rows, so the natural large-scale layout is:
+
+  * per-row super keys  uint32[n_rows, lanes]   → sharded over ALL mesh axes
+    (rows are block-partitioned; a row's table never matters to the filter)
+  * row→table ids       int32[n_rows]           → sharded identically
+  * query super keys    uint32[n_keys, lanes]   → replicated
+  * per-table candidate counts int32[n_tables]  → psum over row shards
+
+A 512-chip pod-pair therefore filters ~512× the rows per step; the host-side
+top-k logic (tiny) consumes the psum'ed per-table counts.  This module is the
+dry-run/roofline target for the paper's own technique ("mate-filter" row in
+EXPERIMENTS.md §Roofline).
+
+Elastic scaling: the arrays are resharded by ``jax.device_put`` with a new
+mesh — no host state depends on the mesh shape.  Straggler mitigation: row
+blocks are balanced by construction (equal shard sizes after padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def filter_counts_local(
+    superkeys: jnp.ndarray,  # uint32[rows_local, lanes]
+    row_tables: jnp.ndarray,  # int32[rows_local] (-1 for padding rows)
+    query_sks: jnp.ndarray,  # uint32[n_keys, lanes]
+    n_tables: int,
+):
+    """Per-table and per-key candidate counts for a local row shard."""
+    conflict = query_sks[None, :, :] & ~superkeys[:, None, :]
+    match = jnp.all(conflict == 0, axis=-1)  # [rows, keys]
+    valid = (row_tables >= 0)[:, None]
+    match = match & valid
+    per_row = jnp.any(match, axis=-1).astype(jnp.int32)  # row matches ≥1 key
+    table_counts = jnp.zeros((n_tables,), jnp.int32).at[
+        jnp.maximum(row_tables, 0)
+    ].add(per_row)
+    key_counts = jnp.sum(match, axis=0, dtype=jnp.int32)  # [keys]
+    return table_counts, key_counts
+
+
+def filter_counts_local_blocked(
+    superkeys: jnp.ndarray,
+    row_tables: jnp.ndarray,
+    query_sks: jnp.ndarray,
+    n_tables: int,
+    row_block: int = 1 << 16,
+):
+    """Memory-optimised probe: lane-unrolled (never materialises the
+    [rows, keys, lanes] conflict tensor — peak is [block, keys] bool) and
+    row-blocked via ``lax.map`` so HBM traffic is one streaming pass over the
+    super keys (§Perf hillclimb 'mate-filter')."""
+    lanes = superkeys.shape[1]
+    n = superkeys.shape[0]
+    nb = -(-n // row_block)
+    pad = nb * row_block - n
+    sk = jnp.pad(superkeys, ((0, pad), (0, 0)))
+    rt = jnp.pad(row_tables, (0, pad), constant_values=-1)
+    sk = sk.reshape(nb, row_block, lanes)
+    rt = rt.reshape(nb, row_block)
+
+    def block(args):
+        skb, rtb = args
+        ok = None
+        for l in range(lanes):
+            conflict_l = (query_sks[None, :, l] & ~skb[:, l : l + 1]) == 0
+            ok = conflict_l if ok is None else (ok & conflict_l)
+        ok = ok & (rtb >= 0)[:, None]
+        per_row = jnp.any(ok, axis=-1).astype(jnp.int32)
+        tc = jnp.zeros((n_tables,), jnp.int32).at[jnp.maximum(rtb, 0)].add(per_row)
+        return tc, jnp.sum(ok, axis=0, dtype=jnp.int32)
+
+    tcs, kcs = jax.lax.map(block, (sk, rt))
+    return jnp.sum(tcs, axis=0), jnp.sum(kcs, axis=0)
+
+
+def make_distributed_filter(
+    mesh: Mesh, n_tables: int, row_axes: tuple[str, ...], impl: str = "broadcast"
+):
+    """jit'd (superkeys, row_tables, query_sks) -> (table_counts, key_counts)
+    with rows sharded over ``row_axes`` and outputs replicated (psum).
+    impl: 'broadcast' (baseline) | 'blocked' (lane-unrolled streaming)."""
+    local = (
+        filter_counts_local if impl == "broadcast" else filter_counts_local_blocked
+    )
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(row_axes), P(row_axes), P()),
+        out_specs=(P(), P()),
+    )
+    def _sharded(superkeys, row_tables, query_sks):
+        tc, kc = local(superkeys, row_tables, query_sks, n_tables)
+        tc = jax.lax.psum(tc, row_axes)
+        kc = jax.lax.psum(kc, row_axes)
+        return tc, kc
+
+    return jax.jit(_sharded)
+
+
+def shard_corpus_rows(
+    superkeys: np.ndarray,
+    row_tables: np.ndarray,
+    mesh: Mesh,
+    row_axes: tuple[str, ...],
+):
+    """Pad to shard multiple and device_put with the row sharding.
+
+    Re-invoking with a different mesh is the elastic-scaling path: arrays are
+    repartitioned from the host copy (or via d2d reshard when alive).
+    """
+    n_shards = int(np.prod([mesh.shape[a] for a in row_axes]))
+    n = superkeys.shape[0]
+    target = -(-n // n_shards) * n_shards
+    sk = np.zeros((target, superkeys.shape[1]), dtype=np.uint32)
+    sk[:n] = superkeys
+    rt = np.full((target,), -1, dtype=np.int32)
+    rt[:n] = row_tables
+    sharding = NamedSharding(mesh, P(row_axes))
+    return (
+        jax.device_put(sk, sharding),
+        jax.device_put(rt, sharding),
+    )

@@ -1,0 +1,236 @@
+"""MATE inverted index with super keys (offline phase, paper §4/§5).
+
+The index extends the classic single-attribute inverted index
+``value -> [(table, col, row)]`` with one ``super key`` per row
+(Eq. 4 → §5.1): the OR-aggregation of the row's per-cell hashes.
+
+Hash functions are pluggable (``hash_name``): 'xash' uses the vectorised JAX
+implementation; 'bf'/'ht'/'murmur'/'md5'/'city'/'simhash' are the paper's
+baselines (computed per unique value, cached).  Per-unique-value hashing plus
+an id-arena makes index build O(unique values) hash work instead of
+O(total cells) — same trick the paper's artifact uses.
+
+Index updates (§5.4): ``insert_table`` appends rows/postings/super keys;
+``delete_table`` tombstones; ``update_cell`` re-hashes the affected row.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import encoding, hashes, xash
+from repro.core.corpus import Corpus, Table
+
+_XASH_CHUNK = 1 << 15
+
+
+def _hash_unique_values(
+    values: list[str],
+    enc: np.ndarray,
+    cfg: xash.XashConfig,
+    hash_name: str,
+    avg_row_width: float,
+) -> np.ndarray:
+    """uint32[n_unique, lanes] hash lanes per unique value."""
+    n = len(values)
+    out = np.zeros((n, cfg.lanes), dtype=np.uint32)
+    if hash_name == "xash":
+        for s in range(0, n, _XASH_CHUNK):
+            out[s : s + _XASH_CHUNK] = np.asarray(
+                xash.xash(enc[s : s + _XASH_CHUNK], cfg)
+            )
+        return out
+    if hash_name == "bf":
+        n_hash = hashes.optimal_bloom_hashes(cfg.bits, avg_row_width)
+        fn = hashes.make_bloom(n_hash)
+    else:
+        fn = hashes.BASELINE_HASHES[hash_name]
+    shift_mask = (1 << 32) - 1
+    for i, v in enumerate(values):
+        h = fn(v, cfg.bits)
+        for lane in range(cfg.lanes):
+            out[i, lane] = (h >> (32 * lane)) & shift_mask
+    return out
+
+
+def _aggregate_superkeys(
+    cell_value_ids: np.ndarray, value_lanes: np.ndarray, lanes: int
+) -> np.ndarray:
+    """OR per-cell hash lanes into per-row super keys (vectorised)."""
+    n_rows = cell_value_ids.shape[0]
+    sk = np.zeros((n_rows, lanes), dtype=np.uint32)
+    valid = cell_value_ids >= 0
+    safe_ids = np.where(valid, cell_value_ids, 0)
+    gathered = value_lanes[safe_ids]  # [rows, cols, lanes]
+    gathered[~valid] = 0
+    np.bitwise_or.reduce(gathered, axis=1, out=sk)
+    return sk
+
+
+class MateIndex:
+    """Inverted index + per-row super keys for one corpus."""
+
+    def __init__(
+        self,
+        corpus: Corpus,
+        cfg: xash.XashConfig = xash.DEFAULT_CONFIG,
+        hash_name: str = "xash",
+        use_corpus_char_freq: bool = False,
+    ):
+        if use_corpus_char_freq and hash_name == "xash":
+            cfg = xash.XashConfig(
+                bits=cfg.bits,
+                n_unique=cfg.n_unique,
+                n_ones=cfg.n_ones,
+                char_freq=tuple(corpus.char_frequencies().tolist()),
+                max_len=cfg.max_len,
+            )
+        self.corpus = corpus
+        self.cfg = cfg
+        self.hash_name = hash_name
+
+        self.value_lanes = _hash_unique_values(
+            corpus.unique_values,
+            corpus.unique_enc,
+            cfg,
+            hash_name,
+            corpus.avg_row_width(),
+        )
+        self.superkeys = _aggregate_superkeys(
+            corpus.cell_value_ids, self.value_lanes, cfg.lanes
+        )
+
+        # posting lists: value id -> int64[n, 2] (global_row, col)
+        self.postings: dict[int, np.ndarray] = {}
+        rows_idx, cols_idx = np.nonzero(corpus.cell_value_ids >= 0)
+        vids = corpus.cell_value_ids[rows_idx, cols_idx]
+        order = np.argsort(vids, kind="stable")
+        vids, rows_idx, cols_idx = vids[order], rows_idx[order], cols_idx[order]
+        bounds = np.searchsorted(vids, np.arange(len(corpus.unique_values) + 1))
+        payload = np.stack([rows_idx, cols_idx], axis=1).astype(np.int64)
+        for vid in range(len(corpus.unique_values)):
+            lo, hi = bounds[vid], bounds[vid + 1]
+            if hi > lo:
+                self.postings[vid] = payload[lo:hi]
+        self._deleted_tables: set[int] = set()
+
+    # -- online-side hashing --------------------------------------------------
+
+    def hash_values(self, values: list[str]) -> np.ndarray:
+        """Hash arbitrary (query-side) strings with this index's hash fn."""
+        enc = encoding.encode_values(values, self.cfg.max_len)
+        return _hash_unique_values(
+            values, enc, self.cfg, self.hash_name, self.corpus.avg_row_width()
+        )
+
+    # -- lookups --------------------------------------------------------------
+
+    def fetch_postings(self, value: str) -> np.ndarray:
+        """PL items for a value: int64[n, 2] of (global_row, col)."""
+        vid = self.corpus.value_of.get(value)
+        if vid is None or vid not in self.postings:
+            return np.zeros((0, 2), dtype=np.int64)
+        pl = self.postings[vid]
+        if self._deleted_tables:
+            tids = self.corpus.table_of_row(pl[:, 0])
+            keep = ~np.isin(tids, list(self._deleted_tables))
+            pl = pl[keep]
+        return pl
+
+    def superkey_of_rows(self, global_rows: np.ndarray) -> np.ndarray:
+        return self.superkeys[global_rows]
+
+    # -- index updates (§5.4) ---------------------------------------------------
+
+    def insert_table(self, cells: list[list[str]], name: str = "") -> int:
+        """Append a new table; returns its table id."""
+        corpus = self.corpus
+        table = Table(table_id=len(corpus.tables), cells=cells, name=name)
+        n_rows, n_cols = table.n_rows, table.n_cols
+        if n_cols > corpus.max_cols:
+            pad = n_cols - corpus.max_cols
+            corpus.cell_value_ids = np.pad(
+                corpus.cell_value_ids, ((0, 0), (0, pad)), constant_values=-1
+            )
+            corpus.max_cols = n_cols
+        corpus.tables.append(table)
+        corpus.row_base = np.append(corpus.row_base, corpus.row_base[-1] + n_rows)
+        corpus.n_cols = np.append(corpus.n_cols, n_cols)
+        base = corpus.total_rows
+        corpus.total_rows += n_rows
+
+        new_ids = np.full((n_rows, corpus.max_cols), -1, dtype=np.int32)
+        new_value_strs: list[str] = []
+        for r, row in enumerate(cells):
+            for c, v in enumerate(row):
+                vid = corpus.value_of.get(v)
+                if vid is None:
+                    vid = len(corpus.unique_values)
+                    corpus.value_of[v] = vid
+                    corpus.unique_values.append(v)
+                    new_value_strs.append(v)
+                new_ids[r, c] = vid
+        if new_value_strs:
+            new_enc = encoding.encode_values(new_value_strs, corpus.max_len)
+            corpus.unique_enc = np.concatenate([corpus.unique_enc, new_enc])
+            new_lanes = _hash_unique_values(
+                new_value_strs, new_enc, self.cfg, self.hash_name,
+                corpus.avg_row_width(),
+            )
+            self.value_lanes = np.concatenate([self.value_lanes, new_lanes])
+        corpus.cell_value_ids = np.concatenate([corpus.cell_value_ids, new_ids])
+        new_sk = _aggregate_superkeys(new_ids, self.value_lanes, self.cfg.lanes)
+        self.superkeys = np.concatenate([self.superkeys, new_sk])
+        for r in range(n_rows):
+            for c in range(len(cells[r])):
+                vid = new_ids[r, c]
+                item = np.array([[base + r, c]], dtype=np.int64)
+                self.postings[vid] = (
+                    np.concatenate([self.postings[vid], item])
+                    if vid in self.postings
+                    else item
+                )
+        return table.table_id
+
+    def delete_table(self, table_id: int) -> None:
+        """Tombstone a table (PL items filtered at fetch; §5.4 delete)."""
+        self._deleted_tables.add(table_id)
+        lo, hi = self.corpus.row_base[table_id], self.corpus.row_base[table_id + 1]
+        self.superkeys[lo:hi] = 0
+
+    def update_cell(self, table_id: int, row: int, col: int, value: str) -> None:
+        """Update one cell: re-hash the affected row's super key (§5.4)."""
+        corpus = self.corpus
+        grow = int(corpus.row_base[table_id]) + row
+        old_vid = int(corpus.cell_value_ids[grow, col])
+        vid = corpus.value_of.get(value)
+        if vid is None:
+            vid = len(corpus.unique_values)
+            corpus.value_of[value] = vid
+            corpus.unique_values.append(value)
+            new_enc = encoding.encode_values([value], corpus.max_len)
+            corpus.unique_enc = np.concatenate([corpus.unique_enc, new_enc])
+            self.value_lanes = np.concatenate(
+                [
+                    self.value_lanes,
+                    _hash_unique_values(
+                        [value], new_enc, self.cfg, self.hash_name,
+                        corpus.avg_row_width(),
+                    ),
+                ]
+            )
+        corpus.tables[table_id].cells[row][col] = value
+        corpus.cell_value_ids[grow, col] = vid
+        # postings: drop old item, add new
+        if old_vid in self.postings:
+            pl = self.postings[old_vid]
+            keep = ~((pl[:, 0] == grow) & (pl[:, 1] == col))
+            self.postings[old_vid] = pl[keep]
+        item = np.array([[grow, col]], dtype=np.int64)
+        self.postings[vid] = (
+            np.concatenate([self.postings[vid], item]) if vid in self.postings else item
+        )
+        # full re-hash of the row's super key
+        self.superkeys[grow] = _aggregate_superkeys(
+            corpus.cell_value_ids[grow : grow + 1], self.value_lanes, self.cfg.lanes
+        )[0]

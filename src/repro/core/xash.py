@@ -1,0 +1,275 @@
+"""XASH — the paper's hash function (§5), plus a pure-Python oracle.
+
+Layout of the ``bits``-wide hash (bit index 0 is the LEFTMOST bit, the
+paper's convention; we store the array as ``bits//32`` uint32 lanes with
+bit ``b`` living in lane ``b // 32`` at in-lane offset ``b % 32``):
+
+    [ length segment : L bits ][ character region : 37*c bits ]
+
+* ``c``   = max c with 37*c < bits            (Eq. 6; c=3 for 128 bits)
+* ``L``   = bits - 37*c                       (17 for 128 bits)
+* ``ones``= argmin_i C(bits, i) > n_unique    (Eq. 5; 6 for 128b / 700M)
+  → 1 length bit + (ones-1) character bits.
+
+Per value v (length l_v = #characters):
+  1. pick the ``ones-1`` least-frequent DISTINCT characters of v —
+     "least frequent" is the within-value occurrence count (the paper's
+     "Adam Sandler"/"Nick Adams" example calls the count-1 'm' THE least
+     frequent character), ties broken by the global character-frequency
+     prior, then by char id.  Count-1 characters also carry an exact (not
+     averaged) position, maximising the location feature's discrimination;
+  2. for each, average occurrence position (1-based) -> segment-local bit
+     x = ceil(avg * c / l_v)                  (Eq. 7, exact integer math)
+     region position p = char_id * c + (x-1);
+  3. rotate the character region LEFT by l_v: p' = (p - l_v) mod (37*c)
+     (§5.3.5 — couples length and characters without extra 1-bits);
+  4. set length bit (l_v mod L) in the leftmost segment (§5.3.4).
+
+The paper's Figure 3 narration ("84th → 47th most-left bit") implies a
+particular segment ordering; any fixed, deterministic layout preserves every
+property that matters (bounded popcount, no false negatives, rotation
+coupling), and we use the layout above on both index and query sides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding
+
+
+@dataclasses.dataclass(frozen=True)
+class XashConfig:
+    bits: int = 128
+    n_unique: int = 700_000_000  # DWTC-scale default (paper §5.3.1)
+    n_ones: int | None = None  # override Eq. 5 if set
+    char_freq: tuple | None = None  # corpus char frequencies (37,)
+    max_len: int = encoding.MAX_LEN
+    # component ablation switches (paper Fig. 6): full XASH = all True
+    use_location: bool = True  # character-location bit within segment
+    use_length: bool = True  # length segment bit
+    use_rotation: bool = True  # rotate char region by l_v
+
+    @property
+    def lanes(self) -> int:
+        assert self.bits % 32 == 0
+        return self.bits // 32
+
+    @property
+    def c(self) -> int:
+        """Bits per character segment (Eq. 6)."""
+        return (self.bits - 1) // encoding.ALPHABET_SIZE
+
+    @property
+    def char_region(self) -> int:
+        return encoding.ALPHABET_SIZE * self.c
+
+    @property
+    def len_segment(self) -> int:
+        return self.bits - self.char_region
+
+    @property
+    def ones(self) -> int:
+        """Total 1-bits per hash (Eq. 5): 1 length bit + (ones-1) char bits."""
+        if self.n_ones is not None:
+            return self.n_ones
+        i = 1
+        while math.comb(self.bits, i) <= self.n_unique:
+            i += 1
+        return i
+
+    @property
+    def n_char_bits(self) -> int:
+        return self.ones - 1
+
+    def freq_rank(self) -> np.ndarray:
+        f = None if self.char_freq is None else np.asarray(self.char_freq)
+        return encoding.freq_rank(f)
+
+
+DEFAULT_CONFIG = XashConfig()
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python oracle (operates on raw strings; ground truth for tests)
+# ---------------------------------------------------------------------------
+
+def xash_oracle(value: str, cfg: XashConfig = DEFAULT_CONFIG) -> int:
+    """Reference XASH of one string as an arbitrary-precision Python int.
+
+    Bit b of the conceptual layout (0 = leftmost) is represented as
+    ``1 << b`` so that lane packing can be checked exactly.
+    """
+    enc = encoding.encode_value(value, cfg.max_len)
+    return xash_oracle_encoded(enc, cfg)
+
+
+def xash_oracle_encoded(enc: np.ndarray, cfg: XashConfig = DEFAULT_CONFIG) -> int:
+    codes = [int(x) for x in enc if x != encoding.PAD]
+    l_v = len(codes)
+    if l_v == 0:
+        return 0
+    rank = cfg.freq_rank()
+    # occurrence stats per char id
+    occ: dict[int, list[int]] = {}
+    for pos, code in enumerate(codes, start=1):
+        occ.setdefault(code - 1, []).append(pos)
+    present = sorted(occ, key=lambda cid: (len(occ[cid]), int(rank[cid]), cid))
+    chosen = present[: cfg.n_char_bits]
+
+    h = 0
+    c, region, lseg = cfg.c, cfg.char_region, cfg.len_segment
+    for cid in chosen:
+        positions = occ[cid]
+        sum_pos, count = sum(positions), len(positions)
+        if cfg.use_location:
+            # x = ceil(avg * c / l_v) with avg = sum_pos / count, exact:
+            x = -((-sum_pos * c) // (count * l_v))
+            x = min(max(x, 1), c)
+        else:
+            x = 1
+        p = cid * c + (x - 1)
+        p_rot = (p - l_v) % region if cfg.use_rotation else p
+        h |= 1 << (lseg + p_rot)
+    if cfg.use_length:
+        h |= 1 << (l_v % lseg)
+    return h
+
+
+def int_to_lanes(h: int, cfg: XashConfig = DEFAULT_CONFIG) -> np.ndarray:
+    """Pack an oracle hash int into uint32 lanes (bit b -> lane b//32, bit b%32)."""
+    out = np.zeros(cfg.lanes, dtype=np.uint32)
+    for lane in range(cfg.lanes):
+        acc = 0
+        for j in range(32):
+            if (h >> (lane * 32 + j)) & 1:
+                acc |= 1 << j
+        out[lane] = acc
+    return out
+
+
+def lanes_to_int(lanes: np.ndarray) -> int:
+    h = 0
+    for i, lane in enumerate(np.asarray(lanes, dtype=np.uint64)):
+        h |= int(lane) << (32 * i)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Vectorised JAX implementation
+# ---------------------------------------------------------------------------
+
+def _bit_positions(enc: jnp.ndarray, cfg: XashConfig, rank: jnp.ndarray):
+    """Per-value bit positions to set.
+
+    Args:
+      enc: uint8[..., max_len] encoded values.
+      rank: int32[37] ascending-frequency rank of each char id.
+    Returns:
+      (positions int32[..., ones], valid bool[..., ones]) —
+      global bit indices per value (length bit last).
+    """
+    a = encoding.ALPHABET_SIZE
+    max_len = enc.shape[-1]
+    c, region, lseg = cfg.c, cfg.char_region, cfg.len_segment
+
+    codes = enc.astype(jnp.int32)
+    is_char = codes > 0
+    l_v = jnp.sum(is_char, axis=-1)  # [...,]
+
+    # one-hot over char ids: [..., max_len, 37]
+    onehot = (codes[..., None] == (jnp.arange(a, dtype=jnp.int32) + 1)) & is_char[..., None]
+    count = jnp.sum(onehot, axis=-2)  # [..., 37]
+    pos_idx = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+    sum_pos = jnp.sum(onehot * pos_idx[..., :, None], axis=-2)  # [..., 37]
+
+    present = count > 0
+    # rarest (n_char_bits) present chars: least within-value count first,
+    # then global-frequency rank (ties by char id via stable top_k order).
+    BIG = jnp.int32(1 << 24)
+    score = jnp.where(present, count * 64 + rank, BIG)  # [..., 37]
+    # top_k on negated score → k smallest
+    k = cfg.n_char_bits
+    neg, chosen_ids = jax.lax.top_k(-score, k)  # [..., k]
+    chosen_valid = (-neg) < BIG
+
+    ch_count = jnp.take_along_axis(count, chosen_ids, axis=-1)
+    ch_sum = jnp.take_along_axis(sum_pos, chosen_ids, axis=-1)
+
+    if cfg.use_location:
+        # x = ceil(sum_pos * c / (count * l_v)) exactly, in int32
+        denom = jnp.maximum(ch_count * l_v[..., None], 1)
+        x = -((-ch_sum * c) // denom)
+        x = jnp.clip(x, 1, c)
+    else:
+        x = jnp.ones_like(chosen_ids)
+
+    p = chosen_ids * c + (x - 1)
+    p_rot = jnp.mod(p - l_v[..., None], region) if cfg.use_rotation else p
+    char_bits = lseg + p_rot  # [..., k]
+
+    len_bit = jnp.mod(l_v, lseg)[..., None]  # [..., 1]
+    len_valid = (l_v > 0)[..., None] & cfg.use_length
+
+    positions = jnp.concatenate([char_bits, len_bit], axis=-1)
+    valid = jnp.concatenate([chosen_valid, len_valid], axis=-1)
+    # empty value (l_v==0) → nothing set
+    valid = valid & (l_v[..., None] > 0)
+    return positions, valid
+
+
+def _pack(positions: jnp.ndarray, valid: jnp.ndarray, cfg: XashConfig) -> jnp.ndarray:
+    """OR the one-hot of each bit position into uint32 lanes [..., lanes]."""
+    bits = cfg.bits
+    onehot = (positions[..., None] == jnp.arange(bits, dtype=jnp.int32)) & valid[..., None]
+    anyset = jnp.any(onehot, axis=-2)  # [..., bits]
+    lanes = anyset.reshape(*anyset.shape[:-1], cfg.lanes, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(jnp.where(lanes, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def xash(enc: jnp.ndarray, cfg: XashConfig = DEFAULT_CONFIG) -> jnp.ndarray:
+    """XASH of encoded values.
+
+    Args:
+      enc: uint8[..., max_len] encoded values (see encoding.py).
+    Returns:
+      uint32[..., lanes] hash lanes.
+    """
+    rank = jnp.asarray(cfg.freq_rank())
+    positions, valid = _bit_positions(enc, cfg, rank)
+    return _pack(positions, valid, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def superkey(enc_row: jnp.ndarray, cfg: XashConfig = DEFAULT_CONFIG) -> jnp.ndarray:
+    """Super key of rows: OR-aggregation of per-cell XASH (§5 'super key').
+
+    Args:
+      enc_row: uint8[..., n_cols, max_len] — all cells of each row.
+    Returns:
+      uint32[..., lanes].
+    """
+    hashes = xash(enc_row, cfg)  # [..., n_cols, lanes]
+    return jax.lax.reduce(
+        hashes,
+        jnp.uint32(0),
+        jnp.bitwise_or,
+        dimensions=(hashes.ndim - 2,),
+    )
+
+
+@jax.jit
+def subsumes(query_sk: jnp.ndarray, row_sk: jnp.ndarray) -> jnp.ndarray:
+    """Row-filter predicate (§6.3): True iff query_sk ⊆ row_sk lane-wise.
+
+    Broadcasts: query uint32[..., lanes] against rows uint32[..., lanes].
+    """
+    return jnp.all((query_sk & ~row_sk) == 0, axis=-1)

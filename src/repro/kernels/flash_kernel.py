@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The LM substrate's hottest compute path: blocked online-softmax attention
+with explicit VMEM tiling.  Grid = (batch·heads, q_blocks); the kv loop is
+the innermost grid axis so the (m, l, acc) running statistics live in VMEM
+scratch across kv steps (standard TPU flash schedule).
+
+Causal + sliding-window masking via position arithmetic (same semantics as
+``layers._mask_bias``); validated against ``layers._sdpa_flash`` /
+``_sdpa_full`` in interpret mode (tests/test_kernels.py).  Training uses the
+jnp flash path for autodiff; this kernel is the serving/prefill fast path on
+real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_kv: int, n_kv: int):
+    qi = pl.program_id(1)  # q block index
+    ki = pl.program_id(2)  # kv block index (innermost)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [block_q, d]
+    k = k_ref[0]  # [block_kv, d]
+    v = v_ref[0]  # [block_kv, dv]
+    sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0
+    )
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1
+    )
+    diff = q_pos - k_pos
+    ok = jnp.ones_like(diff, dtype=jnp.bool_)
+    if causal:
+        ok = ok & (diff >= 0)
+    if window > 0:
+        ok = ok & (diff < window)
+    sc = jnp.where(ok, sc, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+    p = jnp.exp(sc - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [BH, S, d]
+    k: jnp.ndarray,  # [BH, T, d]
+    v: jnp.ndarray,  # [BH, T, dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked flash attention. S, T must divide block sizes (ops.py pads)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[2]
+    assert s % block_q == 0 and t % block_kv == 0, (s, t)
+    n_q, n_kv = s // block_q, t // block_kv
+    scale = 1.0 / np.sqrt(d)
+    grid = (bh, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, n_kv=n_kv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics the kernels must reproduce exactly (tests sweep
+shapes/dtypes and assert equality — the outputs are integral, so equality is
+exact, no tolerance needed).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import xash as xash_core
+
+
+def xash_superkey_ref(enc: jnp.ndarray, cfg=xash_core.DEFAULT_CONFIG) -> jnp.ndarray:
+    """Super keys of rows.
+
+    Args:
+      enc: uint8/int32 [n_rows, n_cols, max_len] encoded cells.
+    Returns:
+      uint32[n_rows, lanes].
+    """
+    return xash_core.superkey(enc.astype(jnp.uint8), cfg)
+
+
+def xash_ref(enc: jnp.ndarray, cfg=xash_core.DEFAULT_CONFIG) -> jnp.ndarray:
+    """Per-value XASH. enc: [n, max_len] -> uint32[n, lanes]."""
+    return xash_core.xash(enc.astype(jnp.uint8), cfg)
+
+
+def filter_match_ref(row_sk: jnp.ndarray, query_sk: jnp.ndarray) -> jnp.ndarray:
+    """Subsumption match matrix.
+
+    Args:
+      row_sk:   uint32[n, lanes] candidate-row super keys.
+      query_sk: uint32[q, lanes] query composite-key super keys.
+    Returns:
+      bool[n, q] — True where query key may be contained in row (§6.3).
+    """
+    conflict = query_sk[None, :, :] & ~row_sk[:, None, :]
+    return jnp.all(conflict == 0, axis=-1)
+
+
+def filter_count_ref(row_sk: jnp.ndarray, query_sk: jnp.ndarray) -> jnp.ndarray:
+    """Per-query count of candidate rows passing the filter: int32[q]."""
+    return jnp.sum(filter_match_ref(row_sk, query_sk), axis=0, dtype=jnp.int32)

@@ -1,0 +1,405 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces results/dryrun/<arch>__<shape>__<mesh>[__<variant>].json
+with memory analysis, cost analysis (FLOPs / bytes), and the collective
+schedule (bytes per collective kind parsed from the post-SPMD HLO) — the
+inputs to the §Roofline table.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun
+[--arch a] [--shape s] [--multi-pod] [--variant name --set k=v ...]``.
+The XLA_FLAGS line above executes before any jax import (jax locks the
+device count on first init).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import mesh as meshlib
+from repro.models import params as params_lib, transformer
+from repro.models.config import ModelConfig
+from repro.serve.engine import make_serve_step
+from repro.train import optimizer as opt, step as train_step_lib
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str, tuple_max: bool) -> int:
+    """Bytes of an HLO result type string; tuples either summed or max'd."""
+    sizes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    if not sizes:
+        return 0
+    return max(sizes) if tuple_max else sum(sizes)
+
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-kind {count, bytes} from post-SPMD HLO (per-device program).
+
+    Async '-start' ops carry (input, output) tuples — we take the max element
+    (the transferred buffer); '-done' ops are skipped to avoid double counts.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(type_str, tuple_max=bool(is_start))
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Variant:
+    name: str = "baseline"
+    fsdp: bool = True
+    remat: bool = True
+    ce_chunk: int = 1024
+    state_dtype: str = "bf16"
+    mla_absorb: bool = False  # paper-faithful DeepSeek decode is naive
+    flash_threshold: int = 8192
+    moe_impl: str = "scatter"  # baseline; 'einsum' = grouped-dispatch opt
+    moe_group: int = 256
+    seq_shard: bool = False  # Megatron-SP residual stream
+    remat_policy: str = "full"  # 'full' | 'dots' | 'none'
+
+    @staticmethod
+    def parse(name: str, sets: list[str]) -> "Variant":
+        v = Variant(name=name)
+        for kv in sets:
+            k, val = kv.split("=", 1)
+            cur = getattr(v, k)
+            if isinstance(cur, bool):
+                val = val.lower() in ("1", "true", "yes")
+            elif isinstance(cur, int):
+                val = int(val)
+            setattr(v, k, val)
+        return v
+
+
+def _abstract_with_sharding(specs, mesh, fsdp: bool):
+    sds = params_lib.abstract(specs)
+    sh = meshlib.param_shardings(specs, mesh, fsdp)
+    return (
+        jax.tree.map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h), sds, sh
+        ),
+        sh,
+    )
+
+
+def _extra_input_sds(cfg: ModelConfig, batch: int, mesh):
+    extras = {}
+    bsh = meshlib.data_sharding(mesh)
+    if cfg.encoder is not None:
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(meshlib.batch_axes(mesh), None, None)),
+        )
+    if cfg.vision is not None:
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision.n_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(meshlib.batch_axes(mesh), None, None)),
+        )
+    return extras
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, variant: Variant):
+    cfg = configs.get_config(arch)
+    cfg = dataclasses.replace(cfg, mla_absorb=variant.mla_absorb)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"skipped": True, "reason": reason}
+
+    import repro.models.layers as L
+    import repro.models.moe as moe_mod
+
+    import repro.models.transformer as T_
+
+    L.FLASH_THRESHOLD = variant.flash_threshold
+    L.SEQ_SHARD = variant.seq_shard
+    T_.REMAT_POLICY = variant.remat_policy
+    moe_mod.MOE_IMPL = variant.moe_impl
+    moe_mod.MOE_GROUP_SIZE = variant.moe_group
+
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    L.enable_activation_sharding(mesh)
+    n_chips = mesh.size
+    specs = transformer.model_specs(cfg)
+    param_sds, param_sh = _abstract_with_sharding(specs, mesh, variant.fsdp)
+    b, s = shape.global_batch, shape.seq_len
+    bsp = P(meshlib.batch_axes(mesh))
+    tok_sh = NamedSharding(mesh, P(meshlib.batch_axes(mesh), None))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg = train_step_lib.TrainConfig(
+            adamw=opt.AdamWConfig(state_dtype=variant.state_dtype),
+            remat=variant.remat,
+            ce_chunk=variant.ce_chunk,
+        )
+        opt_sds = jax.eval_shape(lambda p: opt.init_state(p, tcfg.adamw), param_sds)
+        # optimizer states shard like their parameters (int8 states replicate)
+        def opt_shard(path, leaf):
+            return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        if variant.state_dtype in ("f32", "bf16"):
+            opt_sh = {
+                "step": NamedSharding(mesh, P()),
+                "m": param_sh,
+                "v": param_sh,
+            }
+        else:
+            flat, tdef = jax.tree_util.tree_flatten_with_path(opt_sds)
+            opt_sh = jax.tree_util.tree_unflatten(
+                tdef, [opt_shard(p, l) for p, l in flat]
+            )
+        opt_sds = jax.tree.map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+            opt_sds, opt_sh,
+        )
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh),
+        }
+        batch_sds.update(_extra_input_sds(cfg, b, mesh))
+        fn = train_step_lib.make_train_step(cfg, tcfg)
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                donate_argnums=(0, 1),
+                out_shardings=(param_sh, opt_sh, None),
+            ).lower(param_sds, opt_sds, batch_sds)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        max_seq = s + 64
+
+        def fn(params, tokens, **kw):
+            return transformer.prefill(params, cfg, tokens, max_seq, **kw)
+
+        tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh)
+        extra = _extra_input_sds(cfg, b, mesh)
+        with mesh:
+            lowered = jax.jit(fn).lower(param_sds, tok_sds, **extra)
+            compiled = lowered.compile()
+    else:  # decode
+        max_seq = s
+
+        def make_cache():
+            return transformer.init_cache(cfg, b, max_seq, enc_len=(
+                cfg.encoder.n_frames if cfg.encoder is not None else (
+                    cfg.vision.n_tokens if cfg.vision is not None else 0
+                )
+            ))
+
+        cache_sds = jax.eval_shape(make_cache)
+        cache_sh = meshlib.cache_shardings(cache_sds, mesh)
+        cache_sds = jax.tree.map(
+            lambda sd, h: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=h),
+            cache_sds, cache_sh,
+        )
+        tok_sds = jax.ShapeDtypeStruct(
+            (b,), jnp.int32, sharding=NamedSharding(mesh, bsp if b % (
+                int(np.prod([mesh.shape[a] for a in meshlib.batch_axes(mesh)]))
+            ) == 0 else P(None))
+        )
+
+        def fn(params, cache, token):
+            logits, new_cache = transformer.decode_step(params, cfg, token, cache)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+        with mesh:
+            lowered = jax.jit(
+                fn, donate_argnums=(1,), out_shardings=(None, cache_sh)
+            ).lower(param_sds, cache_sds, tok_sds)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        } if mem is not None else None
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = dict(cost) if cost else None
+        if cost:
+            cost = {
+                k: float(v)
+                for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                )
+            }
+    except Exception as e:
+        cost = {"error": str(e)}
+    hlo_text = compiled.as_text()
+    colls = parse_collectives(hlo_text)
+    from repro.launch import hlo_cost
+
+    try:
+        corrected = hlo_cost.analyze(hlo_text)
+    except Exception as e:
+        corrected = {"error": str(e)}
+
+    # analytic per-device param bytes (2 bytes bf16 / sharded)
+    pbytes = 0
+    flat = jax.tree_util.tree_flatten_with_path(
+        params_lib.abstract(specs)
+    )[0]
+    sh_flat = jax.tree_util.tree_flatten_with_path(param_sh)[0]
+    for (pth, sds_), (_, sh_) in zip(flat, sh_flat):
+        n = int(np.prod(sds_.shape)) * sds_.dtype.itemsize
+        spec = sh_.spec
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            denom *= int(np.prod([mesh.shape[a] for a in axes]))
+        pbytes += n // denom
+
+    pc = cfg.params_count()
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "variant": dataclasses.asdict(variant),
+        "compile_seconds": round(compile_s, 1),
+        "memory_analysis": mem_info,
+        "cost_analysis": cost,
+        "collectives": colls,
+        "hlo_cost": corrected,  # trip-count-aware flops + collective bytes
+        "param_bytes_per_device": pbytes,
+        "params_total": pc["total"],
+        "params_active": pc["active"],
+        "kind": shape.kind,
+        "global_batch": b,
+        "seq_len": s,
+    }
+
+
+def cell_filename(arch, shape, multi_pod, variant_name):
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    suffix = "" if variant_name == "baseline" else f"__{variant_name}"
+    return f"{arch}__{shape}__{mesh_tag}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", action="append", default=[], dest="sets")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or os.path.abspath(RESULTS_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    variant = Variant.parse(args.variant, args.sets)
+
+    archs = [args.arch] if args.arch else list(configs.ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                fname = cell_filename(arch, shape, mp, variant.name)
+                path = os.path.join(out_dir, fname)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {fname}")
+                    continue
+                print(f"[lower] {fname} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape, mp, variant)
+                except Exception:
+                    rec = {"error": traceback.format_exc()}
+                rec["wall_seconds"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = (
+                    "SKIP(" + rec.get("reason", "")[:40] + ")"
+                    if rec.get("skipped")
+                    else ("ERROR" if "error" in rec else "ok")
+                )
+                print(f"  -> {status} in {rec['wall_seconds']}s", flush=True)
+                if "error" in rec:
+                    print(rec["error"].splitlines()[-1], flush=True)
+                if rec.get("memory_analysis"):
+                    print(f"  mem: {rec['memory_analysis']}", flush=True)
+                if rec.get("cost_analysis"):
+                    fl = rec["cost_analysis"].get("flops")
+                    print(f"  flops/device: {fl}", flush=True)
+                coll = rec.get("collectives")
+                if coll:
+                    print(
+                        f"  collectives: {coll['total_count']} ops, "
+                        f"{coll['total_bytes']/1e6:.1f} MB", flush=True
+                    )
+
+
+if __name__ == "__main__":
+    main()

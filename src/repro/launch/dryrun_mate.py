@@ -1,0 +1,134 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run for the paper's own workload: the distributed super-key filter.
+
+Lowers the corpus-sharded subsumption filter (rows over all mesh axes,
+queries replicated, per-table psum) for DWTC-scale inputs and records the
+same JSON schema as the LM cells, so benchmarks/roofline.py includes
+'mate-filter' rows.  Run after (or alongside) repro.launch.dryrun:
+
+    PYTHONPATH=src python -m repro.launch.dryrun_mate [--impl blocked]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import distributed
+from repro.launch import mesh as meshlib
+from repro.launch.dryrun import RESULTS_DIR, parse_collectives
+from repro.launch import hlo_cost
+
+# DWTC scale: 1.45B rows; per 2-pod step we filter a 2^30-row shard set
+SHAPES = {
+    "filter_1g": dict(rows=1 << 30, keys=256, n_tables=1 << 20),
+    "filter_dwtc": dict(rows=1_450_000_000, keys=128, n_tables=1 << 20),
+}
+
+
+def lower(shape_name: str, multi_pod: bool, impl: str):
+    spec = SHAPES[shape_name]
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    row_axes = tuple(mesh.axis_names)  # rows shard over ALL axes
+    n_shards = mesh.size
+    rows = -(-spec["rows"] // n_shards) * n_shards
+    lanes = 4
+    sk_sds = jax.ShapeDtypeStruct(
+        (rows, lanes), jnp.uint32, sharding=NamedSharding(mesh, P(row_axes))
+    )
+    rt_sds = jax.ShapeDtypeStruct(
+        (rows,), jnp.int32, sharding=NamedSharding(mesh, P(row_axes))
+    )
+    q_sds = jax.ShapeDtypeStruct(
+        (spec["keys"], lanes), jnp.uint32, sharding=NamedSharding(mesh, P())
+    )
+    fn = distributed.make_distributed_filter(
+        mesh, spec["n_tables"], row_axes, impl=impl
+    )
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(sk_sds, rt_sds, q_sds)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+    text = compiled.as_text()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    return {
+        "arch": "mate-filter",
+        "shape": shape_name + ("" if impl == "broadcast" else f"-{impl}"),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.size,
+        "variant": {"name": impl},
+        "compile_seconds": round(compile_s, 1),
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "cost_analysis": {
+            k: float(v) for k, v in dict(cost or {}).items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops",) or k.startswith("bytes accessed"))
+        },
+        "collectives": parse_collectives(text),
+        "hlo_cost": hlo_cost.analyze(text),
+        # filter has no params; 'useful work' = 1 subsumption test per
+        # (row × key): 4 AND + 4 CMP ops ≈ 8 int ops
+        "params_total": 0.0,
+        "params_active": 0.0,
+        "kind": "filter",
+        "global_batch": spec["keys"],
+        "seq_len": spec["rows"],
+        "probe_ops": float(spec["rows"]) * spec["keys"] * 8,
+        "stream_bytes": float(rows) * (lanes * 4 + 4),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default=None, choices=[None, "broadcast", "blocked"])
+    ap.add_argument("--shape", default="filter_1g")
+    args = ap.parse_args()
+    impls = [args.impl] if args.impl else ["broadcast", "blocked"]
+    out_dir = os.path.abspath(RESULTS_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    for impl in impls:
+        for mp in (False, True):
+            tag = "2x16x16" if mp else "16x16"
+            name = f"mate-filter__{args.shape}-{impl}__{tag}.json"
+            path = os.path.join(out_dir, name)
+            print(f"[lower] {name}", flush=True)
+            try:
+                rec = lower(args.shape, mp, impl)
+            except Exception:
+                import traceback
+
+                rec = {"error": traceback.format_exc()}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if "error" in rec:
+                print(rec["error"].splitlines()[-1])
+            else:
+                ma = rec["memory_analysis"]
+                hc = rec["hlo_cost"]
+                print(
+                    f"  ok {rec['compile_seconds']}s args/dev="
+                    f"{ma['argument_size_in_bytes']/1e9:.2f}GB "
+                    f"temp={ma['temp_size_in_bytes']/1e9:.2f}GB "
+                    f"coll={hc['collective_bytes_total']/1e6:.1f}MB "
+                    f"bytes_acc={rec['cost_analysis'].get('bytes accessed', 0)/1e9:.1f}GB",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,441 @@
+"""Core layers: norms, RoPE, attention (all flavours), MLP.
+
+Conventions:
+  * activations bf16, softmax/norm statistics f32;
+  * attention is computed with KV heads repeated to full heads — keeps the
+    'heads' axis cleanly TP-sharded for every assigned arch; the KV *cache*
+    still stores only ``n_kv_heads`` (GQA memory win is preserved where it
+    matters);
+  * sequences longer than ``FLASH_THRESHOLD`` use a chunked online-softmax
+    (flash-style) path so 32k-prefill activations never materialise S×S;
+  * decode uses a position-indexed cache update; sliding-window layers use a
+    ring buffer of ``window`` slots.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+FLASH_THRESHOLD = 8192
+FLASH_BLOCK_Q = 1024
+FLASH_BLOCK_KV = 1024
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+#
+# GSPMD's propagation through scan bodies routinely drops the batch sharding
+# of activations (replicating them per device).  The launcher/dry-run enables
+# explicit constraints at layer boundaries and inside the flash/CE loops —
+# the same discipline MaxText applies.  Disabled (no-op) unless a mesh is
+# installed, so CPU unit tests are unaffected.
+# ---------------------------------------------------------------------------
+
+_ACT_BATCH_AXES: tuple | None = None
+_ACT_MODEL_AXIS: str | None = None
+_ACT_BATCH_SIZE: int = 1
+_ACT_MODEL_SIZE: int = 1
+
+
+def enable_activation_sharding(mesh, model_axis: str = "model"):
+    """Enable layer-boundary activation constraints for ``mesh`` (uses axes
+    'pod'/'data' for batch and ``model_axis`` for heads/experts)."""
+    global _ACT_BATCH_AXES, _ACT_MODEL_AXIS, _ACT_BATCH_SIZE, _ACT_MODEL_SIZE
+    _ACT_BATCH_AXES = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _ACT_MODEL_AXIS = model_axis if model_axis in mesh.axis_names else None
+    _ACT_BATCH_SIZE = int(np.prod([mesh.shape[a] for a in _ACT_BATCH_AXES])) if _ACT_BATCH_AXES else 1
+    _ACT_MODEL_SIZE = mesh.shape[model_axis] if _ACT_MODEL_AXIS else 1
+
+
+def disable_activation_sharding():
+    global _ACT_BATCH_AXES, _ACT_MODEL_AXIS
+    _ACT_BATCH_AXES = None
+    _ACT_MODEL_AXIS = None
+
+
+SEQ_SHARD = False  # Megatron-style sequence parallelism for the residual
+# stream: shard [B,S,D] activations on S over 'model' between layers, so TP
+# projections end in reduce-scatters and only GQA K/V (≪ d_model wide) are
+# gathered to full sequence length. Enabled per-variant by the launcher.
+
+
+def constrain_seq(x: jnp.ndarray):
+    """[B, S, D] → P(batch_axes, model, None) when enabled and divisible."""
+    if (
+        not SEQ_SHARD
+        or _ACT_BATCH_AXES is None
+        or _ACT_MODEL_AXIS is None
+        or x.ndim != 3
+        or x.shape[1] % _ACT_MODEL_SIZE != 0
+    ):
+        return constrain_batch(x, 0)
+    from jax.sharding import PartitionSpec as _P
+
+    spec = [None, _ACT_MODEL_AXIS, None]
+    if x.shape[0] % _ACT_BATCH_SIZE == 0:
+        spec[0] = _ACT_BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+def constrain_batch(x: jnp.ndarray, batch_dim: int = 0, heads_dim: int | None = None):
+    """Constrain activation: batch dim over ('pod','data'), optional heads
+    dim over 'model'; other dims replicated. No-op when sharding disabled;
+    per-dim fallback to replication when sizes don't divide."""
+    if _ACT_BATCH_AXES is None or x.ndim == 0:
+        return x
+    spec = [None] * x.ndim
+    if x.shape[batch_dim] % _ACT_BATCH_SIZE == 0:
+        spec[batch_dim] = _ACT_BATCH_AXES
+    if (
+        heads_dim is not None
+        and _ACT_MODEL_AXIS is not None
+        and x.shape[heads_dim] % _ACT_MODEL_SIZE == 0
+    ):
+        spec[heads_dim] = _ACT_MODEL_AXIS
+    if all(s is None for s in spec):
+        return x
+    from jax.sharding import PartitionSpec as _P
+
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm_type == "rms":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def norm_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """RMS/LayerNorm with f32 STATISTICS but no full-tensor f32 copy.
+
+    Statistics (mean/variance) are accumulated in f32; the normalised tensor
+    is produced directly in x.dtype.  Materialising `x.astype(f32)` at layer
+    entry makes XLA save an f32 copy of every scan carry (2× activation
+    memory, observed in the dry-run HLO) for the backward pass.
+    """
+    var = jnp.mean(
+        jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    if cfg.norm_type == "rms":
+        inv = jax.lax.rsqrt(var + cfg.norm_eps)
+        return (x * inv.astype(x.dtype)) * p["scale"].astype(x.dtype)
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = var - jnp.square(mu)
+    inv = jax.lax.rsqrt(var + cfg.norm_eps)
+    out = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return out * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def rms_norm_simple(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D] (D even), positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    sin, cos = jnp.sin(angles)[..., None, :], jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, hd, kv = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+    p = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.attn_bias:
+        p["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        p["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm_simple(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, T, Kv, D] -> [B, T, H, D]."""
+    kv = k.shape[-2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=-2)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int) -> jnp.ndarray:
+    """additive bias [..., S_q, S_k] from position tensors."""
+    ok = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], dtype=bool)
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        ok = ok & (diff >= 0)
+    if window > 0:
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_full(q, k, v, bias):
+    """q: [B,S,H,D]; k,v: [B,T,H,D]; bias: [S,T] or [B,S,T]."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if bias.ndim == 2:
+        scores = scores + bias[None, None]
+    else:
+        scores = scores + bias[:, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _sdpa_flash(q, k, v, q_pos, k_pos, causal, window,
+                block_q=FLASH_BLOCK_Q, block_kv=FLASH_BLOCK_KV):
+    """Chunked online-softmax attention; never materialises S×T.
+
+    q: [B,S,H,D]; k,v: [B,T,H,D]; positions 1-D int32.
+    """
+    b, s, h, d = q.shape
+    dv = v.shape[-1]  # MLA: v head dim differs from q/k
+    t = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    s_pad = -(-s // block_q) * block_q
+    t_pad = -(-t // block_kv) * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, s_pad - s), constant_values=-(10 ** 9))
+    kpos = jnp.pad(k_pos, (0, t_pad - t), constant_values=2 ** 30)
+
+    nq, nk = s_pad // block_q, t_pad // block_kv
+    qp = qp.reshape(b, nq, block_q, h, d)
+    kp = kp.reshape(b, nk, block_kv, h, d)
+    vp = vp.reshape(b, nk, block_kv, h, dv)
+    qpos = qpos.reshape(nq, block_q)
+    kpos = kpos.reshape(nk, block_kv)
+
+    def q_block(args):
+        qb, qposb = args  # [b, block_q, h, d], [block_q]
+
+        @jax.checkpoint  # flash backward: recompute block scores, never save
+        def kv_step(carry, inp):  # the [b,h,q,k] probabilities
+            m, l, acc = carry
+            kb, vb, kposb = inp
+            kb = constrain_batch(kb, 0, 2)
+            vb = constrain_batch(vb, 0, 2)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32) * scale
+            sc = constrain_batch(sc, 0, 1)
+            sc = sc + _mask_bias(qposb, kposb, causal, window)[None, None]
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            acc_new = constrain_batch(acc_new, 0, 1)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4), kpos),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 2, 1, 3).astype(qb.dtype)  # [b, block_q, h, d]
+        return constrain_batch(out, 0, 2)
+
+    out = jax.lax.map(q_block, (qp.transpose(1, 0, 2, 3, 4), qpos))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, dv)
+    return out[:, :s]
+
+
+def attention_fwd(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: jnp.ndarray | None = None,
+    kv_positions: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    x: [B, S, D]; positions: [S] int32. kv_x: cross-attention memory.
+    """
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if kv_x is None:  # self-attention → RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k_pos = (
+            kv_positions
+            if kv_positions is not None
+            else jnp.arange(kv_x.shape[1], dtype=jnp.int32)
+        )
+    k = repeat_kv(k, cfg.n_heads)
+    v = repeat_kv(v, cfg.n_heads)
+    if x.shape[1] * k.shape[1] <= FLASH_THRESHOLD * FLASH_THRESHOLD // 16:
+        bias = _mask_bias(positions, k_pos, causal, window)
+        out = _sdpa_full(q, k, v, bias)
+    else:
+        out = _sdpa_flash(q, k, v, positions, k_pos, causal, window)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype),
+                      preferred_element_type=x.dtype)
+
+
+CACHE_ONEHOT_UPDATE = True  # one-hot multiply-add cache writes: elementwise,
+# so GSPMD partitions them on ANY cache sharding. dynamic_update_slice into a
+# sequence-sharded cache triggers SPMD 'involuntary full remat' (gathers the
+# whole cache every step — EXPERIMENTS.md §Perf decode hillclimb). False →
+# the dus baseline.
+
+
+def _cache_write(buf: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray):
+    """buf: [B, slots, ...]; slot: [B]; val: [B, ...] → buf with row written."""
+    if not CACHE_ONEHOT_UPDATE:
+        return buf.at[jnp.arange(buf.shape[0]), slot].set(val)
+    slots = buf.shape[1]
+    oh = jnp.arange(slots, dtype=jnp.int32)[None, :] == slot[:, None]  # [B, S]
+    oh = oh.reshape(oh.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(oh, val[:, None], buf)
+
+
+def attention_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    cache: dict,
+    *,
+    window: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode with KV cache.
+
+    x: [B, 1, D].  cache: {'k','v': [B, S_slots, Kv, D], 'pos': [B] int32
+    (next position)}.  Full-attention layers use S_slots = max_seq; SWA
+    layers use a ring buffer with S_slots = window.
+    """
+    b = x.shape[0]
+    pos = cache["pos"]  # [B]
+    q, k, v = _project_qkv(p, cfg, x)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % slots, jnp.minimum(pos, slots - 1))
+    ck = _cache_write(cache["k"], slot, k[:, 0])
+    cv = _cache_write(cache["v"], slot, v[:, 0])
+    cpos = cache.get("slot_pos")
+    if cpos is None:
+        cpos = jnp.broadcast_to(jnp.arange(slots, dtype=jnp.int32)[None], (b, slots))
+        cpos = jnp.where(
+            cpos <= pos[:, None], cpos, -(10 ** 9)
+        )
+    else:
+        cpos = _cache_write(cpos, slot, pos)
+
+    kk = repeat_kv(ck, cfg.n_heads)
+    vv = repeat_kv(cv, cfg.n_heads)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, kk).astype(jnp.float32) * scale
+    diff = pos[:, None] - cpos  # [B, slots]
+    ok = (diff >= 0) & (cpos >= 0)  # cpos < 0 marks never-written slots
+    if window > 0:
+        ok = ok & (diff < window)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vv)
+    y = jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype),
+                   preferred_element_type=x.dtype)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1, "slot_pos": cpos}
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int = 0,
+                    dtype=jnp.bfloat16) -> dict:
+    slots = min(window, max_seq) if window > 0 else max_seq
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, slots, kv, hd), dtype),
+        "v": jnp.zeros((batch, slots, kv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "slot_pos": jnp.full((batch, slots), -(10 ** 9), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.glu:
+        return {
+            "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def _act(cfg: ModelConfig, x):
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+def mlp_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.glu:
+        h = _act(cfg, x @ p["wi_gate"].astype(x.dtype)) * (x @ p["wi_up"].astype(x.dtype))
+    else:
+        h = _act(cfg, x @ p["wi"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype),
+                      preferred_element_type=x.dtype)

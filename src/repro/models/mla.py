@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are projected through low-rank latents; the KV cache stores
+only the compressed latent ``c_kv`` (kv_lora_rank) plus the shared RoPE key
+(qk_rope_head_dim) per token — 576 values/token for V3 instead of
+2·128·128 = 32768 for vanilla MHA.
+
+Two decode paths:
+  * naive  — decompress the whole cache to per-head K/V each step
+             (paper-faithful-to-DeepSeek formulation; memory-bound);
+  * absorb — fold the decompression matrices into the query/output
+             projections so attention runs directly in latent space
+             (the optimisation DeepSeek describes; our §Perf hillclimb flips
+             this flag and measures the roofline delta).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "wdq": ParamSpec((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": ParamSpec((m.q_lora_rank,), ("q_lora",), init="ones"),
+        "wuq": ParamSpec((m.q_lora_rank, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wdkv": ParamSpec((d, m.kv_lora_rank + dr), ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "wuk": ParamSpec((m.kv_lora_rank, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wuv": ParamSpec((m.kv_lora_rank, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _latents(p, cfg, x, positions):
+    """Compressed latents for tokens x: (q [B,S,H,dn+dr], c_kv [B,S,r], k_rope [B,S,dr])."""
+    m = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = layers.rms_norm_simple(x @ p["wdq"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(x.dtype))
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = layers.rope(qr, positions, cfg.rope_theta)
+    ckv_full = x @ p["wdkv"].astype(x.dtype)
+    ckv = layers.rms_norm_simple(
+        ckv_full[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps
+    )
+    kr = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # [B,S,1,dr]
+    kr = layers.rope(kr, positions, cfg.rope_theta)[:, :, 0]
+    return jnp.concatenate([qn, qr], axis=-1), ckv, kr
+
+
+def mla_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+            causal: bool = True) -> jnp.ndarray:
+    """Full-sequence MLA (training/prefill)."""
+    m = cfg.mla
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q, ckv, kr = _latents(p, cfg, x, positions)
+    kn = jnp.einsum("btr,rhk->bthk", ckv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("btr,rhk->bthk", ckv, p["wuv"].astype(x.dtype))
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], kn.shape[:3] + (dr,))], axis=-1
+    )
+    if x.shape[1] ** 2 <= layers.FLASH_THRESHOLD ** 2 // 16:
+        bias = layers._mask_bias(positions, positions, causal, 0)
+        out = layers._sdpa_full(q, k, v, bias)
+    else:
+        out = layers._sdpa_flash(q, k, v, positions, positions, causal, 0)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype),
+                      preferred_element_type=x.dtype)
+
+
+def mla_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    cache: dict,
+    absorb: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode. cache: {'ckv': [B,S,r], 'kr': [B,S,dr], 'pos': [B]}."""
+    m = cfg.mla
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    b = x.shape[0]
+    pos = cache["pos"]
+    q, ckv1, kr1 = _latents(p, cfg, x, pos[:, None])  # q: [B,1,H,dn+dr]
+    ckv = layers._cache_write(cache["ckv"], pos, ckv1[:, 0])
+    kr = layers._cache_write(cache["kr"], pos, kr1[:, 0])
+    slots = ckv.shape[1]
+    t_idx = jnp.arange(slots, dtype=jnp.int32)
+    valid = t_idx[None, :] <= pos[:, None]  # [B, S]
+    scale = 1.0 / np.sqrt(dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+
+    if absorb:
+        # fold W_uk into the query: score = (qn W_uk^T) · ckv + qr · kr
+        q_lat = jnp.einsum("bshk,rhk->bshr", qn, p["wuk"].astype(x.dtype))
+        sc = (
+            jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+            + jnp.einsum("bshk,btk->bhst", qr, kr)
+        ).astype(jnp.float32) * scale
+        sc = sc + jnp.where(valid, 0.0, layers.NEG_INF)[:, None, None, :]
+        probs = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        # attend in latent space, then decompress once per step
+        lat = jnp.einsum("bhst,btr->bshr", probs, ckv)  # [B,1,H,r]
+        out = jnp.einsum("bshr,rhk->bshk", lat, p["wuv"].astype(x.dtype))
+    else:
+        kn = jnp.einsum("btr,rhk->bthk", ckv, p["wuk"].astype(x.dtype))
+        v = jnp.einsum("btr,rhk->bthk", ckv, p["wuv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr[:, :, None, :], kn.shape[:3] + (dr,))], axis=-1
+        )
+        sc = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+        sc = sc + jnp.where(valid, 0.0, layers.NEG_INF)[:, None, None, :]
+        probs = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    y = jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype),
+                   preferred_element_type=x.dtype)
+    return y, {"ckv": ckv, "kr": kr, "pos": pos + 1}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts layer: token-choice top-k routing, shared experts,
+capacity-based dispatch (expert-parallel friendly).
+
+Dispatch is the classic capacity-buffer formulation: tokens are scattered
+into per-expert buffers ``[E, C, D]``; expert matmuls run as one grouped
+einsum (the E axis shards over 'model' → EP); results gather back weighted by
+router probabilities.  Overflowing tokens are dropped (capacity_factor
+controls the drop rate) — the standard TPU trade for static shapes.
+
+DeepSeek-V3 nuances implemented: optional shared expert(s) fused into one
+wide MLP; routed scaling; router in f32.  (Aux-loss-free balancing is
+approximated by the standard load-balancing aux loss — documented in
+DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    mo = cfg.moe
+    d, e, f = cfg.d_model, mo.n_routed, mo.d_ff_expert
+    p = {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=0.02),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if mo.n_shared:
+        fs = mo.d_ff_shared or mo.d_ff_expert * mo.n_shared
+        p["shared"] = {
+            "wi_gate": ParamSpec((d, fs), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, fs), ("embed", "mlp")),
+            "wo": ParamSpec((fs, d), ("mlp", "embed")),
+        }
+    return p
+
+
+MOE_IMPL = "einsum"  # 'einsum' (grouped dispatch, EP all-to-all) | 'scatter'
+MOE_GROUP_SIZE = 256  # tokens per dispatch group (t5x-style)
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray):
+    if MOE_IMPL == "einsum":
+        return moe_fwd_einsum(p, cfg, x)
+    return moe_fwd_scatter(p, cfg, x)
+
+
+def moe_fwd_einsum(
+    p: dict, cfg: ModelConfig, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped one-hot einsum dispatch (GShard/t5x formulation).
+
+    Tokens are reshaped into groups of MOE_GROUP_SIZE with per-group expert
+    capacity C = group·k/E·cf; dispatch/combine are one-hot einsums — no
+    scatter/gather, so GSPMD partitions them into clean all-to-alls over the
+    (data × model) mesh instead of replicating token tensors (the scatter
+    formulation's 'involuntary full rematerialization', see EXPERIMENTS.md
+    §Perf hillclimb #1: ~28× collective-bytes reduction on qwen2-moe).
+    """
+    mo: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = mo.n_routed, mo.top_k
+    gsz = min(MOE_GROUP_SIZE, n)
+    g = n // gsz
+    assert n % gsz == 0, (n, gsz)
+    xg = x.reshape(g, gsz, d)
+    xg = layers.constrain_batch(xg, 0)
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # [g, s, e]
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs.reshape(n, e), axis=0)
+    ce_frac = jnp.sum(
+        jax.nn.one_hot(top_e.reshape(-1), e, dtype=jnp.float32), axis=0
+    ) / (n * k)
+    aux = jnp.sum(me * ce_frac) * e * mo.aux_loss_weight
+
+    capacity = int(np.ceil(gsz * k / e * mo.capacity_factor))
+    # running per-expert fill across the k slots (slot-major priority)
+    fill = jnp.zeros((g, e), jnp.int32)
+    disp = jnp.zeros((g, e, capacity, d), x.dtype)
+    combine_y = jnp.zeros((g, gsz, d), x.dtype)
+    eo_list, poh_list = [], []
+    for j in range(k):
+        eo = jax.nn.one_hot(top_e[..., j], e, dtype=jnp.int32)  # [g, s, e]
+        pos = fill[:, None, :] + jnp.cumsum(eo, axis=1) - eo  # [g, s, e]
+        pos_tok = jnp.sum(pos * eo, axis=-1)  # [g, s]
+        keep = pos_tok < capacity
+        poh = jax.nn.one_hot(pos_tok, capacity, dtype=x.dtype) * keep[..., None]
+        eo_list.append((eo.astype(x.dtype), poh, keep))
+        fill = fill + jnp.sum(eo, axis=1)
+        disp = disp + jnp.einsum(
+            "gse,gsc,gsd->gecd", eo.astype(x.dtype), poh, xg
+        )
+    disp = layers.constrain_batch(disp, 0, 1)  # groups→data, experts→model (EP)
+
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", disp, p["wi_gate"].astype(x.dtype))
+    ) * jnp.einsum("gecd,edf->gecf", disp, p["wi_up"].astype(x.dtype))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype),
+                     preferred_element_type=x.dtype)
+    out = layers.constrain_batch(out, 0, 1)
+
+    y = jnp.zeros((g, gsz, d), x.dtype)
+    for j in range(k):
+        eo, poh, keep = eo_list[j]
+        w = top_p[..., j].astype(x.dtype) * keep.astype(x.dtype)  # [g, s]
+        y = y + w[..., None] * jnp.einsum("gse,gsc,gecd->gsd", eo, poh, out)
+    y = y.reshape(b, s, d)
+    if mo.n_shared:
+        y = y + layers.mlp_fwd(p["shared"], cfg, x.reshape(b, s, d))
+    return y, aux
+
+
+def moe_fwd_scatter(
+    p: dict, cfg: ModelConfig, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] → (y, aux_loss)."""
+    mo: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = mo.n_routed, mo.top_k
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [N, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce_frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * k)
+    aux = jnp.sum(me * ce_frac) * e * mo.aux_loss_weight
+
+    capacity = int(np.ceil(n * k / e * mo.capacity_factor))
+    flat_e = top_e.reshape(-1)  # [N*k]
+    flat_p = top_p.reshape(-1)
+    # position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [N*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)  # [N*k]
+    keep = pos_in_e < capacity
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+
+    disp = jnp.zeros((e, capacity, d), x.dtype)
+    disp = disp.at[
+        jnp.where(keep, flat_e, e - 1),
+        jnp.where(keep, pos_in_e, capacity - 1),
+    ].add(jnp.where(keep[:, None], xf[tok_idx], 0))
+    disp = layers.constrain_batch(disp, 1, 0)  # experts → 'model' (EP a2a)
+
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", disp, p["wi_gate"].astype(x.dtype))
+    ) * jnp.einsum("ecd,edf->ecf", disp, p["wi_up"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype),
+                     preferred_element_type=x.dtype)  # [E, C, D]
+    out = layers.constrain_batch(out, 1, 0)
+
+    gathered = out[jnp.where(keep, flat_e, 0), jnp.where(keep, pos_in_e, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0) * flat_p[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[tok_idx].add(gathered)
+
+    if mo.n_shared:
+        y = y + layers.mlp_fwd(p["shared"], cfg, xf)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,126 @@
+"""Parameter specification / materialisation.
+
+Models are described as pytrees of ``ParamSpec`` (shape + logical axes +
+initialiser).  Three consumers:
+
+  * ``materialize``      — real arrays (smoke tests, examples, training);
+  * ``abstract``         — ShapeDtypeStructs (dry-run: no allocation);
+  * ``partition_specs``  — logical axes → mesh PartitionSpec via rule table.
+
+Logical axis names used across the zoo:
+  'vocab', 'embed', 'heads', 'kv_heads', 'head_dim', 'mlp', 'experts',
+  'ssm_inner', 'ssm_state', 'layers' (scan-stacked), None (replicated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis per dim (str | None)
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float | None = None  # None → 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_array(spec: ParamSpec, key, dtype) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[0], 1)
+    if len(spec.shape) >= 3:  # stacked/experts: fan-in is the contract dim
+        fan_in = spec.shape[-2]
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def materialize(specs, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_array(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract(specs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# default logical→mesh rules (single- and multi-pod): TP on 'model',
+# FSDP on 'data' (embed/contract dims), experts on 'model' (EP).
+DEFAULT_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "embed": "data",  # FSDP shard of the contracting dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "layers": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "frames": None,
+}
+
+
+def spec_to_pspec(spec: ParamSpec, rules: dict[str, Any]) -> P:
+    return P(*(rules.get(a) if a is not None else None for a in spec.axes))
+
+
+def partition_specs(specs, rules: dict[str, Any] | None = None):
+    rules = rules or DEFAULT_RULES
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, rules),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def shardings(specs, mesh: Mesh, rules: dict[str, Any] | None = None):
+    pspecs = partition_specs(specs, rules)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs)
+
+
+def validate_divisibility(specs, mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Replace rules that don't divide evenly by replication (e.g. 8 KV heads
+    on a 16-way model axis).  Returns adjusted per-leaf pspecs."""
+    rules = rules or DEFAULT_RULES
+
+    def fix(spec: ParamSpec) -> P:
+        out = []
+        for dim, axis in zip(spec.shape, spec.axes):
+            mesh_axis = rules.get(axis) if axis is not None else None
+            if mesh_axis is None:
+                out.append(None)
+                continue
+            size = (
+                int(np.prod([mesh.shape[a] for a in mesh_axis]))
+                if isinstance(mesh_axis, tuple)
+                else mesh.shape[mesh_axis]
+            )
+            out.append(mesh_axis if dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+A fixed pool of ``batch`` slots; requests occupy slots, decode steps run for
+the whole pool every tick (tokens for finished/empty slots are masked).  This
+is continuous-batching-lite: static shapes (TPU-friendly), per-slot position
+counters, greedy or temperature sampling.
+
+serve_step (one decode tick) is the unit the dry-run lowers for decode_32k /
+long_500k shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    """Returns serve_step(params, cache, token[B], rng) -> (next_token[B], cache)."""
+
+    def serve_step(params, cache, token, rng):
+        logits, cache = transformer.decode_step(params, cfg, token, cache)
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+class ServeEngine:
+    """Host-side loop around prefill/serve_step for real (small) models."""
+
+    def __init__(self, params, cfg: ModelConfig, batch: int, max_seq: int,
+                 temperature: float = 0.0, extra_inputs: dict | None = None):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_seq = batch, max_seq
+        self.extra = extra_inputs or {}
+        self.step_fn = jax.jit(make_serve_step(cfg, temperature), donate_argnums=(1,))
+        self.prefill_fn = jax.jit(
+            lambda p, t, **kw: transformer.prefill(p, cfg, t, max_seq, **kw)
+        )
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve requests in slot batches of ``self.batch``."""
+        rng = jax.random.PRNGKey(0)
+        for start in range(0, len(requests), self.batch):
+            group = requests[start : start + self.batch]
+            b = len(group)
+            plen = max(len(r.prompt) for r in group)
+            toks = np.zeros((self.batch, plen), np.int32)
+            for i, r in enumerate(group):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            logits, cache = self.prefill_fn(self.params, jnp.asarray(toks), **self.extra)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            max_new = max(r.max_new for r in group)
+            for step in range(max_new):
+                for i, r in enumerate(group):
+                    if not r.done and step < r.max_new:
+                        r.out.append(int(token[i]))
+                rng, sub = jax.random.split(rng)
+                token, cache = self.step_fn(self.params, cache, token, sub)
+            for r in group:
+                r.done = True
+        return requests

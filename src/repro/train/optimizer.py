@@ -1,0 +1,141 @@
+"""AdamW from scratch, with optional 8-bit (block-quantised) moments.
+
+No optax in this environment — this is a complete implementation:
+  * decoupled weight decay, bias correction, global-norm clipping;
+  * moment dtype selectable: f32 (default), bf16, or int8 with per-block
+    absmax scales (the distributed-memory optimisation: cuts optimizer HBM
+    by 4× / 8×, visible in the dry-run memory_analysis);
+  * states mirror parameter pytrees so GSPMD shards them identically to
+    their parameters (ZeRO-3 falls out of the FSDP param specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "f32"  # 'f32' | 'bf16' | 'int8'
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# -- int8 block quantisation --------------------------------------------------
+
+def _quant(x: jnp.ndarray) -> dict:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % Q_BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequant(d: dict, shape: tuple[int, ...]) -> jnp.ndarray:
+    flat = (d["q"].astype(jnp.float32) * d["scale"]).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def _make_state(p: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quant(jnp.zeros(p.shape, jnp.float32))
+    dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+    return jnp.zeros(p.shape, dt)
+
+
+def _read_state(s, dtype: str, shape: tuple[int, ...]) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequant(s, shape)
+    return s.astype(jnp.float32)
+
+
+def _write_state(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quant(x)
+    return x.astype(jnp.float32 if dtype == "f32" else jnp.bfloat16)
+
+
+# -- public API ----------------------------------------------------------------
+
+def init_state(params, cfg: AdamWConfig) -> dict:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _make_state(p, cfg.state_dtype), params),
+        "v": jax.tree.map(lambda p: _make_state(p, cfg.state_dtype), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step (pure function). Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, step.astype(jnp.float32))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _read_state(m, cfg.state_dtype, p.shape)
+        vf = _read_state(v, cfg.state_dtype, p.shape)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return p_new, _write_state(mf, cfg.state_dtype), _write_state(vf, cfg.state_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return (
+        new_p,
+        {"step": step, "m": new_m, "v": new_v},
+        {"grad_norm": gn, "lr": lr},
+    )
+
+
+apply_updates = partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 2))(
+    adamw_update
+)

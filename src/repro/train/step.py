@@ -1,0 +1,116 @@
+"""Training step: chunked cross-entropy, MTP loss, remat, jit/shard wiring.
+
+The loss head is CHUNKED over the sequence: hidden states are projected to
+vocab logits one seq-chunk at a time inside a scan, so the [B, S, V] logits
+tensor (the largest activation of LM training at 150k vocabs) never
+materialises — peak activation memory drops by O(S/chunk).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    remat: bool = True
+    ce_chunk: int = 1024  # seq chunk for the loss head (0 → unchunked)
+    mtp_weight: float = 0.3
+    z_loss: float = 1e-4
+
+
+def _ce_from_logits(logits: jnp.ndarray, labels: jnp.ndarray, z_loss: float):
+    """Mean CE over valid (label >= 0) positions + z-loss. f32."""
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) + z_loss * lse ** 2
+    ce = jnp.where(valid, ce, 0.0)
+    return jnp.sum(ce), jnp.sum(valid)
+
+
+def chunked_ce(hidden: jnp.ndarray, head: jnp.ndarray, labels: jnp.ndarray,
+               chunk: int, z_loss: float):
+    """hidden [B,S,D] @ head [D,V] vs labels [B,S] without a full [B,S,V]."""
+    b, s, d = hidden.shape
+    if chunk <= 0 or s <= chunk:
+        logits = (hidden @ head).astype(jnp.float32)
+        tot, cnt = _ce_from_logits(logits, labels, z_loss)
+        return tot / jnp.maximum(cnt, 1)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward: [B,chunk,V] never
+    def body(carry, inp):  # outlives its chunk (forward OR backward)
+        tot, cnt = carry
+        h, l = inp
+        h = layers.constrain_batch(h, 0)
+        logits = (h @ head).astype(jnp.float32)
+        logits = layers.constrain_batch(logits, 0, 2)  # vocab TP-sharded
+        t, c = _ce_from_logits(logits, l, z_loss)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(params, cfg: ModelConfig, tcfg: TrainConfig, batch: dict):
+    """batch: tokens int32[B,S], labels int32[B,S] (+frames/patches)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    kw = {k: batch[k] for k in ("frames", "patches") if k in batch}
+    hidden, aux = transformer.forward_hidden(
+        params, cfg, tokens, remat=tcfg.remat, **kw
+    )
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(hidden.dtype)
+    loss = chunked_ce(hidden, head, labels, tcfg.ce_chunk, tcfg.z_loss)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth:
+        mtp_h = transformer.mtp_hidden(params, cfg, tokens, hidden)
+        # MTP predicts token t+2: labels shifted one extra step
+        mtp_labels = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=1
+        )
+        mtp_loss = chunked_ce(mtp_h, head, mtp_labels, tcfg.ce_chunk, tcfg.z_loss)
+        loss = loss + tcfg.mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    jit-compatible; the caller supplies in/out shardings for pjit-style
+    distribution (launch/train.py and launch/dryrun.py do).
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, tcfg, batch), has_aux=True
+        )(params)
+        params, opt_state, om = opt.adamw_update(
+            params, grads, opt_state, tcfg.adamw
+        )
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run on the default single CPU device (the dry-run manages its own
+# device count in subprocesses; never set xla_force_host_platform_device_count
+# here — smoke tests and benches must see 1 device).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,99 @@
+"""Inverted index: postings, super keys, §5.4 updates, distributed filter."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import discovery, distributed, xash
+from repro.core.corpus import Corpus, Table
+from repro.core.index import MateIndex
+from repro.data import synthetic
+
+
+def small_corpus():
+    return Corpus(
+        [
+            Table(0, [["uk", "cambridge", "x"], ["japan", "tokyo", "y"]]),
+            Table(1, [["uk", "oxford", "z"]]),
+        ]
+    )
+
+
+def test_postings_locations():
+    idx = MateIndex(small_corpus())
+    pl = idx.fetch_postings("uk")
+    assert sorted(map(tuple, pl.tolist())) == [(0, 0), (2, 0)]  # global rows 0,2
+    assert len(idx.fetch_postings("nonexistent")) == 0
+
+
+def test_superkey_is_or_of_cells():
+    corpus = small_corpus()
+    idx = MateIndex(corpus)
+    want = 0
+    for v in ["uk", "cambridge", "x"]:
+        want |= xash.xash_oracle(v, idx.cfg)
+    assert xash.lanes_to_int(idx.superkeys[0]) == want
+
+
+def test_insert_table():
+    corpus = small_corpus()
+    idx = MateIndex(corpus)
+    tid = idx.insert_table([["uk", "cambridge", "new"], ["france", "paris", "w"]])
+    assert tid == 2
+    pl = idx.fetch_postings("uk")
+    assert len(pl) == 3
+    # new rows discoverable
+    q = Table(-1, [["uk", "cambridge"]])
+    topk, _ = discovery.discover(idx, q, [0, 1], k=5)
+    assert tid in [e.table_id for e in topk]
+
+
+def test_delete_table():
+    idx = MateIndex(small_corpus())
+    idx.delete_table(0)
+    pl = idx.fetch_postings("uk")
+    assert [tuple(x) for x in pl.tolist()] == [(2, 0)]
+
+
+def test_update_cell_rehashes():
+    corpus = small_corpus()
+    idx = MateIndex(corpus)
+    old_sk = idx.superkeys[0].copy()
+    idx.update_cell(0, 0, 1, "london")
+    assert not np.array_equal(old_sk, idx.superkeys[0])
+    assert len(idx.fetch_postings("cambridge")) == 0
+    assert len(idx.fetch_postings("london")) == 1
+    want = 0
+    for v in ["uk", "london", "x"]:
+        want |= xash.xash_oracle(v, idx.cfg)
+    assert xash.lanes_to_int(idx.superkeys[0]) == want
+
+
+def test_corpus_char_frequencies():
+    corpus = small_corpus()
+    freq = corpus.char_frequencies()
+    assert freq.shape == (37,)
+    assert abs(freq.sum() - 1.0) < 1e-9
+    idx = MateIndex(corpus, use_corpus_char_freq=True)
+    assert idx.cfg.char_freq is not None
+
+
+def test_distributed_filter_matches_local():
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=60, seed=1))
+    idx = MateIndex(corpus)
+    queries = synthetic.make_mixed_queries(corpus, 1, 10, 2, seed=2)
+    q, q_cols = queries[0]
+    _keys, sk_of_key = discovery.build_query_superkeys(idx, q, q_cols)
+    qsk = np.stack(list(sk_of_key.values()))
+    row_tables = np.asarray(
+        corpus.table_of_row(np.arange(corpus.total_rows)), dtype=np.int32
+    )
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    sk, rt = distributed.shard_corpus_rows(idx.superkeys, row_tables, mesh, ("data",))
+    fn = distributed.make_distributed_filter(mesh, len(corpus.tables), ("data",))
+    tc, kc = fn(sk, rt, qsk)
+    tc_ref, kc_ref = distributed.filter_counts_local(
+        idx.superkeys, row_tables, qsk, len(corpus.tables)
+    )
+    assert np.array_equal(np.asarray(tc), np.asarray(tc_ref))
+    assert np.array_equal(np.asarray(kc), np.asarray(kc_ref))

@@ -1,0 +1,141 @@
+"""Per-arch smoke tests: reduced configs, forward/train/decode on CPU."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import params as P_, transformer
+from repro.train import optimizer as opt, step as step_lib
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = list(configs.ARCHS)
+
+
+def _setup(name, generous_moe=True):
+    cfg = configs.reduce_config(configs.get_config(name))
+    if generous_moe and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    specs = transformer.model_specs(cfg)
+    params = P_.materialize(specs, KEY)
+    return cfg, params
+
+
+def _extra(cfg, b):
+    kw = {}
+    if cfg.encoder is not None:
+        kw["frames"] = jax.random.normal(
+            KEY, (b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.vision is not None:
+        kw["patches"] = jax.random.normal(
+            KEY, (b, cfg.vision.n_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return kw
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_finite(name):
+    cfg, params = _setup(name)
+    B, S = 2, 24
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits, aux = transformer.forward(params, cfg, tokens, **_extra(cfg, B))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_consistency(name):
+    """prefill+decode must reproduce the full forward's next-token logits.
+
+    MoE archs: exact once capacity drops are disabled, EXCEPT hybrid
+    (jamba), where SSM chunked-vs-recurrent drift can flip top-k routing —
+    there we require bounded drift instead (DESIGN.md §6 note).
+    """
+    cfg, params = _setup(name)
+    if cfg.mla is not None:
+        cfg = dataclasses.replace(cfg, mla_absorb=False)  # exact path
+    B, S = 2, 20
+    tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    kw = _extra(cfg, B)
+    full, _ = transformer.forward(params, cfg, tokens, remat=False, **kw)
+    pre, cache = transformer.prefill(params, cfg, tokens[:, :S], max_seq=48, **kw)
+    d_pre = float(jnp.max(jnp.abs(pre - full[:, S - 1])))
+    dec, cache = transformer.decode_step(params, cfg, tokens[:, S], cache)
+    d_dec = float(jnp.max(jnp.abs(dec - full[:, S])))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    tol = 0.35 if (cfg.ssm is not None and cfg.moe is not None) else 0.05
+    assert d_pre / scale < tol, d_pre
+    assert d_dec / scale < tol, d_dec
+
+
+@pytest.mark.parametrize("name", ["qwen3-32b", "qwen2-moe-a2.7b", "jamba-v0.1-52b"])
+def test_train_loss_decreases(name):
+    cfg, params = _setup(name)
+    tcfg = step_lib.TrainConfig(
+        adamw=opt.AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=50),
+        ce_chunk=16,
+    )
+    state = opt.init_state(params, tcfg.adamw)
+    B, S = 4, 24
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tokens,
+        "labels": jnp.concatenate([tokens[:, 1:], -jnp.ones((B, 1), jnp.int32)], 1),
+    }
+    batch.update(_extra(cfg, B))
+    tstep = jax.jit(step_lib.make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for _ in range(6):
+        params, state, m = tstep(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_mla_absorb_matches_naive():
+    cfg, params = _setup("deepseek-v3-671b")
+    B, S = 2, 12
+    tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    outs = {}
+    for absorb in (False, True):
+        c = dataclasses.replace(cfg, mla_absorb=absorb)
+        _, cache = transformer.prefill(params, c, tokens[:, :S], max_seq=32)
+        dec, _ = transformer.decode_step(params, c, tokens[:, S], cache)
+        outs[absorb] = dec
+    diff = float(jnp.max(jnp.abs(outs[True] - outs[False])))
+    scale = float(jnp.max(jnp.abs(outs[False]))) + 1e-6
+    assert diff / scale < 0.15  # algebraically identical, bf16-reordered
+
+
+def test_sliding_window_masks_far_context():
+    """A token beyond the SWA window must not influence attention output."""
+    name = "h2o-danube-3-4b"
+    cfg = configs.reduce_config(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, sliding_window=4, n_layers=1)
+    specs = transformer.model_specs(cfg)
+    params = P_.materialize(specs, KEY)
+    S = 12
+    t1 = jax.random.randint(KEY, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab_size)  # perturb far past
+    l1, _ = transformer.forward(params, cfg, t1, remat=False)
+    l2, _ = transformer.forward(params, cfg, t2, remat=False)
+    # last position attends only to the last 4 → unchanged
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) < 1e-3
+
+
+def test_param_counts_sane():
+    for name, approx_b in [
+        ("qwen1.5-0.5b", 0.62),  # incl. big embedding
+        ("deepseek-v3-671b", 671),
+        ("mamba2-1.3b", 1.3),
+    ]:
+        cfg = configs.get_config(name)
+        total = cfg.params_count()["total"] / 1e9
+        assert 0.5 * approx_b < total < 1.6 * approx_b, (name, total)

@@ -1,0 +1,116 @@
+"""Optimizer, losses, compression, checkpointing, data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.train import compression, optimizer as opt
+from repro.train.step import chunked_ce
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init_state(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16", "int8"])
+def test_optimizer_state_dtypes(dtype):
+    cfg = opt.AdamWConfig(lr=0.05, state_dtype=dtype, warmup_steps=1, total_steps=100)
+    params = {"w": jnp.ones((300,)) * 4.0}
+    state = opt.init_state(params, cfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1.5, dtype
+
+
+def test_schedule_warmup_cosine():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(opt.schedule(cfg, jnp.array(0.0))) == 0.0
+    assert abs(float(opt.schedule(cfg, jnp.array(10.0))) - 1.0) < 1e-6
+    assert abs(float(opt.schedule(cfg, jnp.array(100.0))) - 0.1) < 1e-3
+
+
+def test_int8_quant_roundtrip():
+    x = jax.random.normal(KEY, (1000,)) * 3
+    q = opt._quant(x)
+    back = opt._dequant(q, (1000,))
+    assert float(jnp.max(jnp.abs(back - x))) < 3 * 2 / 127 + 1e-3
+
+
+def test_chunked_ce_matches_full():
+    B, S, D, V = 2, 32, 16, 50
+    h = jax.random.normal(KEY, (B, S, D), jnp.float32)
+    head = jax.random.normal(KEY, (D, V), jnp.float32)
+    labels = jax.random.randint(KEY, (B, S), 0, V).at[:, -3:].set(-1)
+    full = chunked_ce(h, head, labels, 0, 1e-4)
+    for chunk in (8, 16, 32):
+        part = chunked_ce(h, head, labels, chunk, 1e-4)
+        assert abs(float(full) - float(part)) < 1e-4
+    # gradients agree too
+    g1 = jax.grad(lambda hh: chunked_ce(hh, head, labels, 0, 1e-4))(h)
+    g2 = jax.grad(lambda hh: chunked_ce(hh, head, labels, 8, 1e-4))(h)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-5
+
+
+def test_grad_compression_error_feedback():
+    """int8+EF gradient exchange stays close to exact reduction over steps."""
+    g_seq = [jax.random.normal(jax.random.PRNGKey(i), (64,)) for i in range(30)]
+    err = jnp.zeros((64,))
+    acc_exact = jnp.zeros((64,))
+    acc_comp = jnp.zeros((64,))
+    for g in g_seq:
+        acc_exact += g
+        gf = g + err
+        q, s = compression.quantize(gf)
+        deq = compression.dequantize(q, s)
+        err = gf - deq
+        acc_comp += deq
+    # cumulative compressed sum tracks the exact sum (EF removes bias)
+    assert float(jnp.max(jnp.abs(acc_comp - acc_exact))) < 0.2
+
+
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x * step, tree))
+    assert mgr.all_steps() == [2, 3]  # keep=2 GC'd step 1
+    restored = mgr.restore(3, tree)
+    assert np.array_equal(np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 3)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    step, r2 = mgr.restore_latest(tree)
+    assert step == 3
+
+
+def test_checkpoint_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"a": jnp.ones((3,))}
+    path = mgr.save(7, tree)
+    assert not os.path.exists(path + ".tmp")
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def test_data_pipeline_deterministic_restartable():
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=100, seed=9)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = p1.batch(17), p2.batch(17)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+    # learnable structure: bigram determinism rate ≈ 70%
+    det = np.mean(p1.next_tok[b1["tokens"][:, :-1]] == b1["tokens"][:, 1:])
+    assert det > 0.5

@@ -1,0 +1,113 @@
+"""XASH unit + property tests (paper §5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding, xash
+
+CFG = xash.DEFAULT_CONFIG
+CFG512 = xash.XashConfig(bits=512)
+
+value_strat = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+    min_size=0,
+    max_size=encoding.MAX_LEN,
+)
+
+
+def test_config_derivations_match_paper():
+    # 128-bit: c=3 (Eq. 6), 111-bit char region, 17-bit length segment,
+    # 6 ones for 700M uniques (Eq. 5, §5.3.1)
+    assert CFG.c == 3
+    assert CFG.char_region == 111
+    assert CFG.len_segment == 17
+    assert CFG.ones == 6
+    assert CFG.n_char_bits == 5
+    assert CFG512.c == 13  # argmax 37c < 512
+
+
+def test_popcount_bounded():
+    vals = ["massachusetts institute of technology", "ab", "0123456789", "x"]
+    for v in vals:
+        h = xash.xash_oracle(v, CFG)
+        assert bin(h).count("1") <= CFG.ones
+
+
+@settings(max_examples=200, deadline=None)
+@given(value_strat)
+def test_jax_matches_oracle(value):
+    enc = encoding.encode_values([value], CFG.max_len)
+    got = np.asarray(xash.xash(enc, CFG))[0]
+    want = xash.int_to_lanes(xash.xash_oracle(value, CFG), CFG)
+    assert np.array_equal(got, want), value
+
+
+@settings(max_examples=50, deadline=None)
+@given(value_strat)
+def test_jax_matches_oracle_512(value):
+    enc = encoding.encode_values([value], CFG512.max_len)
+    got = np.asarray(xash.xash(enc, CFG512))[0]
+    want = xash.int_to_lanes(xash.xash_oracle(value, CFG512), CFG512)
+    assert np.array_equal(got, want), value
+
+
+def test_rotation_distinguishes_anagrams():
+    # same chars, same length → same bits WITHOUT location encoding; the
+    # paper's location feature must separate them (§5.3.3 'loop' vs 'pool')
+    assert xash.xash_oracle("loop", CFG) != xash.xash_oracle("pool", CFG)
+    # length feature: same chars, different lengths
+    assert xash.xash_oracle("aa", CFG) != xash.xash_oracle("aaa", CFG)
+
+
+def test_empty_and_whitespace():
+    assert xash.xash_oracle("", CFG) == 0
+    assert xash.xash_oracle(" ", CFG) != 0
+
+
+def test_determinism_across_calls():
+    enc = encoding.encode_values(["hello world"] * 3, CFG.max_len)
+    h = np.asarray(xash.xash(enc, CFG))
+    assert np.array_equal(h[0], h[1]) and np.array_equal(h[1], h[2])
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(value_strat, min_size=1, max_size=8), st.data())
+def test_no_false_negatives_lemma(row_values, data):
+    """§6.3 Lemma: a key drawn from the row's own values is ALWAYS subsumed
+    by the row super key — the filter never loses a joinable row."""
+    enc = encoding.encode_values(row_values, CFG.max_len)[None]
+    sk = np.asarray(xash.superkey(enc, CFG))[0]
+    k = data.draw(st.integers(1, len(row_values)))
+    idx = data.draw(
+        st.lists(
+            st.integers(0, len(row_values) - 1), min_size=k, max_size=k, unique=True
+        )
+    )
+    q = 0
+    for i in idx:
+        q |= xash.xash_oracle(row_values[i], CFG)
+    q_lanes = xash.int_to_lanes(q, CFG)
+    assert np.all((q_lanes & ~sk) == 0)
+
+
+def test_encoding_roundtrip():
+    v = "hello world 42"
+    assert encoding.decode_value(encoding.encode_value(v)) == v
+    # non-alphabet chars map to space
+    assert encoding.decode_value(encoding.encode_value("a-b")) == "a b"
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_strat, st.integers(0, 7))
+def test_ablation_flags_oracle_jax_parity(value, flags):
+    """Fig-6 component switches: JAX impl must track the oracle exactly."""
+    cfg = xash.XashConfig(
+        use_location=bool(flags & 1),
+        use_length=bool(flags & 2),
+        use_rotation=bool(flags & 4),
+    )
+    enc = encoding.encode_values([value], cfg.max_len)
+    got = np.asarray(xash.xash(enc, cfg))[0]
+    want = xash.int_to_lanes(xash.xash_oracle(value, cfg), cfg)
+    assert np.array_equal(got, want), (value, flags)

@@ -1,0 +1,40 @@
+"""Dump the largest tensor shapes in a dry-run cell's compiled HLO."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch import dryrun as D
+
+def biggest(arch, shape, multi_pod=False, variant=None, sets=(), top=12):
+    v = D.Variant.parse(variant or "probe", list(sets))
+    import dataclasses, jax, jax.numpy as jnp
+    # replicate lower_cell but keep the compiled text
+    rec_text = {}
+    orig = D.parse_collectives
+    def capture(text):
+        rec_text['t'] = text
+        return orig(text)
+    D.parse_collectives = capture
+    rec = D.lower_cell(arch, shape, multi_pod, v)
+    D.parse_collectives = orig
+    sizes = {}
+    for m in re.finditer(r'(\w+)\[([\d,]+)\]', rec_text['t']):
+        dt, dims = m.group(1), m.group(2)
+        bs = {'f32':4,'bf16':2,'s32':4,'u32':4,'pred':1,'f16':2,'s8':1,'u8':1,'f64':8}.get(dt)
+        if not bs: continue
+        n = 1
+        for d in dims.split(','): n *= int(d)
+        sizes[f'{dt}[{dims}]'] = n*bs
+    for k, v2 in sorted(sizes.items(), key=lambda x: -x[1])[:top]:
+        print(f'{v2/1e9:8.2f} GB  {k}')
+    return rec
+
+if __name__ == '__main__':
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('arch'); ap.add_argument('shape')
+    ap.add_argument('--multi-pod', action='store_true')
+    ap.add_argument('--set', action='append', default=[], dest='sets')
+    a = ap.parse_args()
+    rec = biggest(a.arch, a.shape, a.multi_pod, sets=a.sets)
+    if rec.get('memory_analysis'): print('temp GB:', rec['memory_analysis']['temp_size_in_bytes']/1e9)
