@@ -72,6 +72,7 @@ def main():
     fig6_ablation()
     fig7_keysize()
     fig8_initcol()
+    common.save_trajectory("figures")
 
 
 if __name__ == "__main__":

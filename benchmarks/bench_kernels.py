@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -51,6 +52,16 @@ def kernels():
         "kern/filter_count_jnp_ref", dt_ref * 1e6,
         f"kernel_vs_ref={dt_ref/dt:.2f}x"
     )
+    # backend-dispatched filter the online engine actually calls (Pallas on
+    # TPU, vectorised XLA on CPU) — the per-launch cost the batched engine
+    # amortises over whole table batches
+    dt_auto = _time(ops.filter_match_auto, row_sk, q_sk)
+    backend = jax.default_backend()
+    dispatch = "pallas" if backend == "tpu" else "xla"
+    common.emit(
+        "kern/filter_match_auto_4096x256", dt_auto * 1e6,
+        f"probes_per_s={probes/dt_auto:,.0f};backend_dispatch={backend}_{dispatch}"
+    )
 
 
 def engines():
@@ -72,6 +83,7 @@ def engines():
 def main():
     kernels()
     engines()
+    common.save_trajectory("kernels")
 
 
 if __name__ == "__main__":

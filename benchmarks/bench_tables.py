@@ -46,6 +46,35 @@ def table1_runtime():
     return out
 
 
+def table_engines():
+    """Beyond-paper §6.3 fast path: scalar Alg. 1 vs batched kernel-backed
+    engine vs multi-query shared-launch batching (docs/ARCHITECTURE.md ADR)."""
+    print("# Engine comparison: scalar vs batched (kernel) vs multi-query")
+    out = {}
+    for gname, n_rows in common.ROWS.items():
+        queries = common.query_group(n_rows)
+        idx = common.index("xash", 128)
+        # warm up jit caches (full group: the multi-query launch shape
+        # depends on the whole group) so we measure steady-state serving
+        for engine in ("seq", "batched", "many"):
+            common.run_discovery(idx, queries, engine=engine)
+        times = {}
+        for engine in ("seq", "batched", "batched_np", "many"):
+            dt, st = common.run_discovery(idx, queries, engine=engine)
+            times[engine] = dt
+            out[(gname, engine)] = (dt, st)
+            common.emit(
+                f"engines/{gname}/{engine}", dt / len(queries) * 1e6,
+                f"precision={st['precision_mean']:.3f};passed={st['passed']}"
+            )
+        common.emit(
+            f"engines/{gname}/speedups", 0.0,
+            f"batched_vs_seq={times['seq']/times['batched']:.2f}x;"
+            f"many_vs_seq={times['seq']/times['many']:.2f}x"
+        )
+    return out
+
+
 def table2_precision():
     print("# Table 2 analog: precision mean±std")
     for gname, n_rows in common.ROWS.items():
@@ -62,7 +91,9 @@ def table2_precision():
 
 def main():
     table1_runtime()
+    table_engines()
     table2_precision()
+    common.save_trajectory("tables")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
-"""Shared benchmark fixtures: corpus, query groups, index cache, timing."""
+"""Shared benchmark fixtures: corpus, query groups, index cache, timing,
+and ``BENCH_*.json`` trajectory persistence (see docs/BENCHMARKS.md)."""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 from functools import lru_cache
@@ -11,9 +14,11 @@ sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 import numpy as np
 
 from repro.core import discovery, xash
-from repro.core.batched import discover_batched
+from repro.core.batched import discover_batched, discover_many
 from repro.core.index import MateIndex
 from repro.data import synthetic
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 SEED = 3
 N_TABLES = 500
@@ -51,23 +56,35 @@ def query_group(n_rows: int, key_width: int = 2):
 
 
 def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
-    """Returns (seconds_total, aggregate stats)."""
+    """Returns (seconds_total, aggregate stats).
+
+    Engines: ``seq`` (faithful Alg. 1), ``batched`` (kernel-backed blocks,
+    Pallas on TPU / XLA fallback on CPU via ops.filter_match_auto),
+    ``batched_np`` (same engine, pure-numpy filter), ``many`` (all queries
+    share one filter launch — the DiscoveryEngine path).
+    """
     tp = fp = checks = passed = 0
     precs = []
     t0 = time.perf_counter()
-    for q, q_cols in queries:
-        if engine == "batched":
-            # use_kernel=False: on CPU the Pallas interpret path adds per-call
-            # overhead; the numpy filter is the fair wall-clock proxy here
-            _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=False)
-        else:
-            _, st = discovery.discover(idx, q, q_cols, k=k, row_filter=row_filter)
+    if engine == "many":
+        stats = [st for _, st in discover_many(idx, [(q, c) for q, c in queries], k=k)]
+    else:
+        stats = []
+        for q, q_cols in queries:
+            if engine == "batched":
+                _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=True)
+            elif engine == "batched_np":
+                _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=False)
+            else:
+                _, st = discovery.discover(idx, q, q_cols, k=k, row_filter=row_filter)
+            stats.append(st)
+    dt = time.perf_counter() - t0
+    for st in stats:
         tp += st.verified_tp
         fp += st.verified_fp
         checks += st.filter_checks
         passed += st.filter_passed
         precs.append(st.precision)
-    dt = time.perf_counter() - t0
     return dt, {
         "tp": tp,
         "fp": fp,
@@ -84,3 +101,32 @@ ROWS_CSV = []
 def emit(name: str, us_per_call: float, derived: str):
     ROWS_CSV.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_trajectory(section: str) -> str:
+    """Append this run's rows to ``benchmarks/results/BENCH_<section>.json``.
+
+    Each file is a JSON list of run records ({"ts", "rows"}) so successive
+    runs accumulate a perf trajectory; rows emitted since the last save are
+    consumed.  Returns the file path.
+    """
+    global ROWS_CSV
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{section}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "ts": time.time(),
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": d} for n, us, d in ROWS_CSV
+        ],
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    ROWS_CSV = []
+    return path

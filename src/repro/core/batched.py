@@ -1,36 +1,194 @@
-"""Batched (TPU-style) discovery engine — the beyond-paper optimisation.
+"""Batched kernel-backed discovery engine — the beyond-paper fast path.
 
 The faithful Algorithm 1 (discovery.py) is a branchy per-row scan: ideal on a
 CPU, hostile to a vector unit.  This engine restructures the online phase into
-fixed-shape batches:
+contiguous blocks fed straight to the §6.3 filter kernel:
 
-  * tables are still visited in descending posting-list order, but in batches;
-    rule 1 (global cutoff) applies BETWEEN batches — identical pruning
-    guarantee, since the bound only improves as the scan proceeds;
-  * the row filter runs as ONE vectorised subsumption test per batch
-    (the Pallas filter kernel on TPU, jnp on CPU) instead of per-row probes;
+  * query-side key hashing is ONE batched ``xash.superkey`` call
+    (``MateIndex.superkey_of_keys``), not per-value host hashing;
+  * candidate posting lists are gathered into a CSR block per query
+    (``MateIndex.gather_candidates``): rows, value indices and table
+    boundaries as three contiguous arrays — no per-row dict lookups;
+  * the row filter runs as one subsumption launch per table batch through
+    ``kernels.ops.filter_match_auto`` (Pallas ``filter_kernel`` on TPU,
+    vectorised XLA fallback on CPU); value/key eligibility is a precomputed
+    boolean gather, so match extraction is ``np.nonzero`` — no Python loop
+    over posting-list items;
+  * tables are visited in the same descending posting-list order as
+    Algorithm 1; rule 1 (global cutoff) applies BETWEEN batches — identical
+    pruning guarantee, since the bound only improves as the scan proceeds;
   * rule 2 becomes a *stronger* bound: the exact filtered-candidate count per
-    table (available for free from the batch filter) replaces the paper's
-    incremental ``L_t - r_checked + r_match`` bound, so strictly more tables
-    are skipped before verification;
+    table (free from the batch filter) replaces the paper's incremental
+    ``L_t - r_checked + r_match`` bound, so strictly more tables are skipped
+    before verification;
   * only filter-surviving pairs are verified on the host (same exact
-    `calculateJ` as the faithful engine).
+    ``calculateJ`` as the faithful engine).
 
-Top-k results are identical to Algorithm 1 up to equal-score tie ordering
-(tests assert score-multiset equality against the brute-force oracle).
+``discover_many`` extends this to multi-query batching: all requests' rows
+and keys concatenate into ONE filter launch, then demux per request — the
+shape ``serve.engine.DiscoveryEngine`` uses for concurrent traffic.
+
+Top-k results are BIT-IDENTICAL to Algorithm 1 (ids, joinability scores and
+mappings): both engines visit tables in the same order with the same
+replace-only-if-strictly-greater heap, and every pruned table provably cannot
+enter a full heap (its joinability is bounded by the pruning threshold).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import heapq
 from collections import defaultdict
 
 import numpy as np
 
 from repro.core import discovery as seq
-from repro.core.discovery import DiscoveryStats, TopKEntry
-from repro.core.index import MateIndex
 from repro.core.corpus import Table
+from repro.core.discovery import DiscoveryStats, TopKEntry
+from repro.core.index import CandidateBlock, MateIndex
 from repro.kernels import ops
+
+DEFAULT_BATCH_TABLES = 256
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Precomputed per-query state feeding the batched filter."""
+
+    query: Table
+    q_cols: list[int]
+    distinct_keys: list[tuple]
+    q_sk: np.ndarray  # uint32[K, lanes] batched query-key super keys
+    block: CandidateBlock  # CSR candidate rows grouped per table
+    elig: np.ndarray  # bool[N_items, K] init-value eligibility per item
+    stats: DiscoveryStats
+
+
+def plan_query(
+    index: MateIndex, query: Table, q_cols: list[int],
+    init_mode: str = "cardinality",
+) -> QueryPlan:
+    """Initialization phase (§6.1) in columnar form: one hash launch, one
+    posting-list gather, one eligibility matrix."""
+    stats = DiscoveryStats()
+    init_col = seq.init_column_selection(query, q_cols, init_mode, index)
+    init_idx = q_cols.index(init_col)
+    keys = [tuple(row[c] for c in q_cols) for row in query.cells]
+    distinct_keys = list(dict.fromkeys(keys))
+    q_sk = index.superkey_of_keys(distinct_keys)
+
+    values = list(dict.fromkeys(query.column(init_col)))
+    value_id = {v: i for i, v in enumerate(values)}
+    # bool[n_values, K]: key kid is probed against items of value v only if
+    # the key's init-column entry IS v (Alg. 1 matches per posting list).
+    elig_value = np.zeros((len(values), len(distinct_keys)), dtype=bool)
+    for kid, key in enumerate(distinct_keys):
+        elig_value[value_id[key[init_idx]], kid] = True
+
+    block = index.gather_candidates(values)
+    stats.pl_items_total = block.n_items
+    stats.tables_fetched = block.n_tables
+    elig = (
+        elig_value[block.value_idx]
+        if block.n_items
+        else np.zeros((0, len(distinct_keys)), dtype=bool)
+    )
+    return QueryPlan(query, q_cols, distinct_keys, q_sk, block, elig, stats)
+
+
+def _filter(row_sk: np.ndarray, q_sk: np.ndarray, use_kernel: bool) -> np.ndarray:
+    if use_kernel:
+        return ops.filter_match_auto(row_sk, q_sk)
+    return ops.subsume_np(row_sk, q_sk)
+
+
+def _calculate_j(
+    index: MateIndex,
+    plan: QueryPlan,
+    rows: np.ndarray,
+    hits: np.ndarray,
+) -> tuple[int, tuple[int, ...] | None]:
+    """Exact verification (Alg. 1 line 21) over filter-surviving pairs."""
+    corpus = index.corpus
+    stats = plan.stats
+    rows_per_mapping: dict[tuple[int, ...], set] = defaultdict(set)
+    rs, ks = np.nonzero(hits)
+    for r, kid in zip(rs.tolist(), ks.tolist()):
+        key = plan.distinct_keys[kid]
+        mappings = seq._verify_pair(key, corpus.row_values(int(rows[r])))
+        if mappings:
+            stats.verified_tp += 1
+            for m in mappings:
+                rows_per_mapping[m].add(key)
+        else:
+            stats.verified_fp += 1
+    if not rows_per_mapping:
+        return 0, None
+    mapping, keyset = max(
+        rows_per_mapping.items(), key=lambda kv: (len(kv[1]), kv[0])
+    )
+    return len(keyset), mapping
+
+
+class _TopK:
+    """Algorithm 1's heap: push while filling, replace only if strictly
+    greater — the tie semantics both engines share (bit-identical results)."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.heap: list[tuple[int, int]] = []  # (J, -table_id) min-heap
+        self.mapping: dict[int, tuple[int, ...] | None] = {}
+
+    def bound(self) -> int:
+        return self.heap[0][0] if len(self.heap) >= self.k else 0
+
+    @property
+    def full(self) -> bool:
+        return len(self.heap) >= self.k
+
+    def offer(self, tid: int, joinability: int, mapping) -> None:
+        self.mapping[tid] = mapping
+        if joinability <= 0:
+            return
+        if len(self.heap) < self.k:
+            heapq.heappush(self.heap, (joinability, -tid))
+        elif joinability > self.heap[0][0]:
+            heapq.heapreplace(self.heap, (joinability, -tid))
+
+    def entries(self) -> list[TopKEntry]:
+        out = [
+            TopKEntry(table_id=-neg, joinability=j, mapping=self.mapping.get(-neg))
+            for j, neg in self.heap
+        ]
+        out.sort(key=lambda e: (-e.joinability, e.table_id))
+        return out
+
+
+def _score_tables(
+    index: MateIndex,
+    plan: QueryPlan,
+    topk: _TopK,
+    hits: np.ndarray,
+    rows: np.ndarray,
+    t_start: int,
+    t_stop: int,
+    base: int,
+) -> None:
+    """Verify (or rule-2-prune) tables [t_start, t_stop) of the plan's block,
+    whose items live at ``block`` offsets ``base:`` covered by hits/rows."""
+    block, stats = plan.block, plan.stats
+    ptr = block.table_ptr
+    for t in range(t_start, t_stop):
+        stats.tables_evaluated += 1
+        tid = int(block.table_ids[t])
+        lo, hi = int(ptr[t]) - base, int(ptr[t + 1]) - base
+        sub = hits[lo:hi]
+        # strengthened rule 2: exact filtered-candidate count bound
+        if topk.full and int(sub.sum()) <= topk.bound():
+            stats.tables_pruned_rule2 += 1
+            continue
+        joinability, mapping = _calculate_j(index, plan, rows[lo:hi], sub)
+        topk.offer(tid, joinability, mapping)
 
 
 def discover_batched(
@@ -38,109 +196,84 @@ def discover_batched(
     query: Table,
     q_cols: list[int],
     k: int = 10,
-    batch_tables: int = 128,
+    batch_tables: int = DEFAULT_BATCH_TABLES,
     init_mode: str = "cardinality",
     use_kernel: bool = True,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
-    stats = DiscoveryStats()
-    corpus = index.corpus
-
-    init_col = seq.init_column_selection(query, q_cols, init_mode, index)
-    keys, sk_of_key = seq.build_query_superkeys(index, query, q_cols)
-    init_idx = q_cols.index(init_col)
-    distinct_keys = list(dict.fromkeys(keys))
-    key_id = {key: i for i, key in enumerate(distinct_keys)}
-    q_sk = np.stack([sk_of_key[key] for key in distinct_keys])  # [K, lanes]
-    keys_of_value: dict[str, list[int]] = defaultdict(list)
-    for key in distinct_keys:
-        keys_of_value[key[init_idx]].append(key_id[key])
-
-    # fetch + group by table
-    by_table: dict[int, list[tuple[int, str]]] = defaultdict(list)
-    for value in dict.fromkeys(query.column(init_col)):
-        pl = index.fetch_postings(value)
-        stats.pl_items_total += len(pl)
-        if len(pl) == 0:
-            continue
-        tids = corpus.table_of_row(pl[:, 0])
-        for (grow, _col), tid in zip(pl.tolist(), np.atleast_1d(tids).tolist()):
-            by_table[int(tid)].append((int(grow), value))
-    order = sorted(by_table, key=lambda t: (-len(by_table[t]), t))
-    stats.tables_fetched = len(order)
-
-    top: list[tuple[int, int]] = []  # (J, table_id) sorted asc by J
-
-    def j_k() -> int:
-        return top[0][0] if len(top) >= k else 0
-
-    results: dict[int, tuple[int, tuple | None]] = {}
-    for start in range(0, len(order), batch_tables):
-        batch = order[start : start + batch_tables]
-        # rule 1 between batches: the batch is PL-desc sorted, so if the
-        # FIRST table of the batch is below the bound, everything after is.
-        if len(top) >= k and len(by_table[batch[0]]) <= j_k():
-            stats.tables_pruned_rule1 += len(order) - start
+    """Batched Algorithm 1: one filter launch per ``batch_tables`` tables."""
+    plan = plan_query(index, query, q_cols, init_mode)
+    stats, block = plan.stats, plan.block
+    topk = _TopK(k)
+    n_tables = block.n_tables
+    for start in range(0, n_tables, batch_tables):
+        stop = min(start + batch_tables, n_tables)
+        # rule 1 between batches: tables are PL-desc sorted, so if the FIRST
+        # table of the batch is at/below the bound, everything after is too.
+        first_count = int(block.table_ptr[start + 1] - block.table_ptr[start])
+        if topk.full and first_count <= topk.bound():
+            stats.tables_pruned_rule1 += n_tables - start
             break
+        lo, hi = int(block.table_ptr[start]), int(block.table_ptr[stop])
+        rows = block.rows[lo:hi]
+        row_sk = index.superkey_of_rows(rows)
+        elig = plan.elig[lo:hi]
+        hits = _filter(row_sk, plan.q_sk, use_kernel) & elig
+        stats.pl_items_checked += int(rows.shape[0])
+        stats.filter_checks += int(elig.sum())
+        stats.filter_passed += int(hits.sum())
+        _score_tables(index, plan, topk, hits, rows, start, stop, lo)
+    return topk.entries(), stats
 
-        rows, row_key_lists, row_tid = [], [], []
-        for tid in batch:
-            for grow, value in by_table[tid]:
-                rows.append(grow)
-                row_key_lists.append(keys_of_value[value])
-                row_tid.append(tid)
-        rows_np = np.asarray(rows, dtype=np.int64)
-        row_sk = index.superkeys[rows_np]  # [R, lanes]
-        match = np.asarray(ops.filter_match(row_sk, q_sk)) if use_kernel else (
-            np.all((q_sk[None, :, :] & ~row_sk[:, None, :]) == 0, axis=-1)
-        )  # [R, K]
 
-        # restrict matches to keys sharing the row's init value
-        pair_rows: dict[int, list[tuple[int, int]]] = defaultdict(list)
-        for r, (grow, kl, tid) in enumerate(zip(rows, row_key_lists, row_tid)):
-            stats.pl_items_checked += 1
-            stats.filter_checks += len(kl)
-            for kid in kl:
-                if match[r, kid]:
-                    stats.filter_passed += 1
-                    pair_rows[tid].append((kid, grow))
+def discover_many(
+    index: MateIndex,
+    queries: list[tuple[Table, list[int]]],
+    k: int | list[int] = 10,
+    init_mode: str = "cardinality",
+    use_kernel: bool = True,
+) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
+    """Multi-query discovery sharing ONE filter launch.
 
-        for tid in batch:
-            stats.tables_evaluated += 1
-            pairs = pair_rows.get(tid, [])
-            # strengthened rule 2: exact filtered candidate count bound
-            if len(top) >= k and len(pairs) <= j_k():
-                stats.tables_pruned_rule2 += 1
-                continue
-            rows_per_mapping: dict[tuple[int, ...], set] = defaultdict(set)
-            for kid, grow in pairs:
-                mappings = seq._verify_pair(
-                    distinct_keys[kid], corpus.row_values(grow)
-                )
-                if mappings:
-                    stats.verified_tp += 1
-                    for m in mappings:
-                        rows_per_mapping[m].add(kid)
-                else:
-                    stats.verified_fp += 1
-            if rows_per_mapping:
-                mapping, rowset = max(
-                    rows_per_mapping.items(), key=lambda kv: (len(kv[1]), kv[0])
-                )
-                joinability = len(rowset)
-            else:
-                mapping, joinability = None, 0
-            results[tid] = (joinability, mapping)
-            if joinability > 0:
-                import heapq
+    All requests' candidate rows and query keys concatenate into a single
+    subsumption launch; the match matrix is then demuxed per request and
+    scored with the same rule-1/rule-2 + heap semantics, so each request's
+    top-k is bit-identical to its solo ``discover``/``discover_batched`` run.
 
-                if len(top) < k:
-                    heapq.heappush(top, (joinability, -tid))
-                elif joinability > top[0][0]:
-                    heapq.heapreplace(top, (joinability, -tid))
-
-    entries = [
-        TopKEntry(table_id=-neg, joinability=j, mapping=results[-neg][1])
-        for j, neg in top
-    ]
-    entries.sort(key=lambda e: (-e.joinability, e.table_id))
-    return entries, stats
+    Cost note: the shared launch computes the full (Σ rows × Σ keys) cross
+    product — only the block diagonal is consumed, so filter work grows
+    ~linearly with group size beyond the useful probes.  That trade buys one
+    kernel dispatch for the whole group, which wins while dispatch latency
+    dominates (small/medium groups, accelerator backends); keep serving
+    groups bounded (``DiscoveryEngine(batch=...)``, default 8) rather than
+    fusing unbounded request sets.
+    """
+    ks = [k] * len(queries) if isinstance(k, int) else list(k)
+    assert len(ks) == len(queries)
+    plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
+    if plans:
+        rows_all = np.concatenate([p.block.rows for p in plans])
+        q_all = np.concatenate([p.q_sk for p in plans])
+        match = _filter(index.superkey_of_rows(rows_all), q_all, use_kernel)
+    out: list[tuple[list[TopKEntry], DiscoveryStats]] = []
+    r_off = k_off = 0
+    for plan, k_i in zip(plans, ks):
+        n_items, n_keys = plan.block.n_items, plan.q_sk.shape[0]
+        sub = match[r_off : r_off + n_items, k_off : k_off + n_keys]
+        r_off += n_items
+        k_off += n_keys
+        hits = sub & plan.elig
+        stats, block = plan.stats, plan.block
+        stats.pl_items_checked = n_items
+        stats.filter_checks = int(plan.elig.sum())
+        stats.filter_passed = int(hits.sum())
+        topk = _TopK(k_i)
+        for t in range(block.n_tables):
+            # rule 1: tables PL-desc sorted → bound prunes the whole suffix
+            # (verification work only; the filter already ran batched).
+            count = int(block.table_ptr[t + 1] - block.table_ptr[t])
+            if topk.full and count <= topk.bound():
+                stats.tables_pruned_rule1 += block.n_tables - t
+                break
+            _score_tables(index, plan, topk, hits, block.rows, t, t + 1, 0)
+        out.append((topk.entries(), stats))
+    return out

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.corpus import Corpus, Table
 from repro.core.index import MateIndex
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -72,20 +73,14 @@ def build_query_superkeys(index: MateIndex, query: Table, q_cols: list[int]):
     """Map init-column value -> [(key tuple, super key lanes)] (Alg. 1 line 6).
 
     The query super key of a row is the OR of the XASH (or baseline hash) of
-    its |Q| key values only.
+    its |Q| key values only.  Hashing is batched: all distinct keys go through
+    ``MateIndex.superkey_of_keys`` in one call (one ``xash.superkey`` launch
+    for XASH indexes) instead of per-value host loops.
     """
-    lanes = index.cfg.lanes
     keys = [tuple(row[c] for c in q_cols) for row in query.cells]
-    flat_values = sorted({v for key in keys for v in key})
-    value_lanes = index.hash_values(flat_values)
-    lane_of = {v: value_lanes[i] for i, v in enumerate(flat_values)}
-    sk_of_key: dict[tuple, np.ndarray] = {}
-    for key in keys:
-        if key not in sk_of_key:
-            sk = np.zeros(lanes, dtype=np.uint32)
-            for v in key:
-                sk |= lane_of[v]
-            sk_of_key[key] = sk
+    distinct = list(dict.fromkeys(keys))
+    sks = index.superkey_of_keys(distinct)
+    sk_of_key = {key: sks[i] for i, key in enumerate(distinct)}
     return keys, sk_of_key
 
 
@@ -183,7 +178,7 @@ def discover(
                     continue
                 q = np.stack([sk_of_key[key] for key in keys_here])  # [m, lanes]
                 sub = row_sks[idxs]  # [n, lanes]
-                hit = np.all((q[None, :, :] & ~sub[:, None, :]) == 0, axis=-1)
+                hit = ops.subsume_np(sub, q)  # [n, m]
                 for a, i in enumerate(idxs):
                     matched_keys[i] = [
                         key for b, key in enumerate(keys_here) if hit[a, b]

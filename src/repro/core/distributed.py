@@ -28,6 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map landed after 0.4.x; fall back to the experimental home
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def filter_counts_local(
     superkeys: jnp.ndarray,  # uint32[rows_local, lanes]
@@ -94,7 +99,7 @@ def make_distributed_filter(
     )
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(row_axes), P(row_axes), P()),
         out_specs=(P(), P()),

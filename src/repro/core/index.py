@@ -12,9 +12,17 @@ O(total cells) — same trick the paper's artifact uses.
 
 Index updates (§5.4): ``insert_table`` appends rows/postings/super keys;
 ``delete_table`` tombstones; ``update_cell`` re-hashes the affected row.
+
+Columnar accessors for the batched online engine (``gather_candidates``,
+``superkey_of_keys``, ``superkey_of_rows``) expose the index as contiguous
+arrays — posting lists concatenated per candidate table in CSR layout and
+query-key super keys hashed in one batched call — so the row filter can run
+as a single kernel launch with no per-row dict lookups.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -65,6 +73,33 @@ def _aggregate_superkeys(
     gathered[~valid] = 0
     np.bitwise_or.reduce(gathered, axis=1, out=sk)
     return sk
+
+
+@dataclasses.dataclass
+class CandidateBlock:
+    """All PL items for a set of query values, concatenated per candidate
+    table (CSR layout) — the contiguous feed for one batched filter launch.
+
+    Tables are ordered by descending item count (ties by ascending table id),
+    the same order Algorithm 1 visits them, so rule-1 cutoffs apply to CSR
+    prefixes.  Within a table, items keep fetch order (value-major, PL order).
+    """
+
+    rows: np.ndarray  # int64[N] global row ids, grouped by table
+    value_idx: np.ndarray  # int32[N] index into the queried ``values`` list
+    table_ids: np.ndarray  # int64[T] candidate table ids
+    table_ptr: np.ndarray  # int64[T+1] CSR boundaries into rows/value_idx
+
+    @property
+    def n_items(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def n_tables(self) -> int:
+        return int(self.table_ids.shape[0])
+
+    def table_slice(self, t: int) -> slice:
+        return slice(int(self.table_ptr[t]), int(self.table_ptr[t + 1]))
 
 
 class MateIndex:
@@ -123,6 +158,33 @@ class MateIndex:
             values, enc, self.cfg, self.hash_name, self.corpus.avg_row_width()
         )
 
+    def superkey_of_keys(self, keys: list[tuple[str, ...]]) -> np.ndarray:
+        """Batched query-side key hashing: uint32[len(keys), lanes].
+
+        The super key of a query key is the OR of its value hashes (Alg. 1
+        line 6).  For XASH the whole key set is encoded as one
+        ``[n_keys, |Q|, max_len]`` block and hashed by a single
+        ``xash.superkey`` call; baseline hashes fall back to per-unique-value
+        hashing + OR.  Bit-identical to hashing each value separately.
+        """
+        lanes = self.cfg.lanes
+        if not keys:
+            return np.zeros((0, lanes), dtype=np.uint32)
+        if self.hash_name == "xash":
+            width = len(keys[0])
+            flat = [v for key in keys for v in key]
+            enc = encoding.encode_values(flat, self.cfg.max_len)
+            enc = enc.reshape(len(keys), width, self.cfg.max_len)
+            return np.asarray(xash.superkey(enc, self.cfg))
+        flat_values = sorted({v for key in keys for v in key})
+        value_lanes = self.hash_values(flat_values)
+        lane_of = {v: value_lanes[i] for i, v in enumerate(flat_values)}
+        out = np.zeros((len(keys), lanes), dtype=np.uint32)
+        for i, key in enumerate(keys):
+            for v in key:
+                out[i] |= lane_of[v]
+        return out
+
     # -- lookups --------------------------------------------------------------
 
     def fetch_postings(self, value: str) -> np.ndarray:
@@ -138,7 +200,48 @@ class MateIndex:
         return pl
 
     def superkey_of_rows(self, global_rows: np.ndarray) -> np.ndarray:
-        return self.superkeys[global_rows]
+        """Block gather of per-row super keys: uint32[len(global_rows), lanes]."""
+        return self.superkeys[np.asarray(global_rows, dtype=np.int64)]
+
+    def gather_candidates(self, values: list[str]) -> CandidateBlock:
+        """Concatenate the posting lists of ``values`` into one CSR block.
+
+        One fetch per value, then a single vectorised group-by-table pass —
+        the per-(row, value) dict bookkeeping of the scalar engine collapses
+        into three contiguous arrays the filter kernel can consume directly.
+        """
+        parts_rows: list[np.ndarray] = []
+        parts_vidx: list[np.ndarray] = []
+        for i, value in enumerate(values):
+            pl = self.fetch_postings(value)
+            if len(pl):
+                parts_rows.append(pl[:, 0])
+                parts_vidx.append(np.full(len(pl), i, dtype=np.int32))
+        if not parts_rows:
+            return CandidateBlock(
+                rows=np.zeros(0, dtype=np.int64),
+                value_idx=np.zeros(0, dtype=np.int32),
+                table_ids=np.zeros(0, dtype=np.int64),
+                table_ptr=np.zeros(1, dtype=np.int64),
+            )
+        rows = np.concatenate(parts_rows)
+        vidx = np.concatenate(parts_vidx)
+        tids = np.asarray(self.corpus.table_of_row(rows), dtype=np.int64)
+        uniq, inv, counts = np.unique(tids, return_inverse=True, return_counts=True)
+        # Algorithm 1 visit order: descending item count, ties by table id.
+        order = np.lexsort((uniq, -counts))
+        rank = np.empty(len(uniq), dtype=np.int64)
+        rank[order] = np.arange(len(uniq))
+        perm = np.argsort(rank[inv], kind="stable")
+        counts_sorted = counts[order]
+        ptr = np.zeros(len(uniq) + 1, dtype=np.int64)
+        np.cumsum(counts_sorted, out=ptr[1:])
+        return CandidateBlock(
+            rows=rows[perm],
+            value_idx=vidx[perm],
+            table_ids=uniq[order],
+            table_ptr=ptr,
+        )
 
     # -- index updates (§5.4) ---------------------------------------------------
 

@@ -117,6 +117,66 @@ def filter_match(
     return out[:n, :q].astype(jnp.bool_)
 
 
+@jax.jit
+def _subsume_block(row_sk: jnp.ndarray, query_sk: jnp.ndarray) -> jnp.ndarray:
+    """Vectorised XLA subsumption: (uint32[n, lanes], uint32[q, lanes]) -> bool[n, q]."""
+    return jnp.all((query_sk[None, :, :] & ~row_sk[:, None, :]) == 0, axis=-1)
+
+
+def subsume_np(row_sk: np.ndarray, query_sk: np.ndarray) -> np.ndarray:
+    """Host-side subsumption oracle (§6.3): bool[n, q].
+
+    The single definition of the filter predicate outside the kernels — the
+    engines' numpy paths route here so the semantics can't silently diverge.
+    """
+    rows = np.asarray(row_sk, dtype=np.uint32)
+    qry = np.asarray(query_sk, dtype=np.uint32)
+    return np.all((qry[None, :, :] & ~rows[:, None, :]) == 0, axis=-1)
+
+
+# CPU fallback pads each dim up to a power-of-two bucket so XLA compiles
+# O(log) distinct shapes instead of one program per batch size.
+_FALLBACK_MIN_N = 512
+_FALLBACK_MIN_Q = 64
+# below this many (row × key) probes, numpy beats the XLA dispatch latency
+_MIN_XLA_PROBES = 1 << 17
+
+
+def _pow2_bucket(size: int, minimum: int) -> int:
+    b = minimum
+    while b < size:
+        b <<= 1
+    return b
+
+
+def filter_match_auto(
+    row_sk: np.ndarray | jnp.ndarray,
+    query_sk: np.ndarray | jnp.ndarray,
+) -> np.ndarray:
+    """Backend-dispatched super-key row filter (§6.3): bool[n, q] on the host.
+
+    On TPU this launches the Pallas ``filter_kernel`` (the memory-roofline
+    path); on any other backend (CPU/GPU hosts) it runs the vectorised XLA
+    subsumption instead of the Pallas interpreter, which is orders of
+    magnitude slower per launch.  Tiny blocks (< ~100k probes) short-circuit
+    to numpy, where the XLA dispatch latency alone would dominate.
+    """
+    n, q = row_sk.shape[0], query_sk.shape[0]
+    if n == 0 or q == 0:
+        return np.zeros((n, q), dtype=bool)
+    if jax.default_backend() != "tpu":
+        if n * q < _MIN_XLA_PROBES:
+            return subsume_np(row_sk, query_sk)
+        rows = _pad_to(
+            jnp.asarray(row_sk, jnp.uint32), 0, _pow2_bucket(n, _FALLBACK_MIN_N)
+        )
+        qry = _pad_to(
+            jnp.asarray(query_sk, jnp.uint32), 0, _pow2_bucket(q, _FALLBACK_MIN_Q)
+        )
+        return np.asarray(_subsume_block(rows, qry))[:n, :q]
+    return np.asarray(filter_match(row_sk, query_sk))
+
+
 def filter_count(
     row_sk: jnp.ndarray,
     query_sk: jnp.ndarray,

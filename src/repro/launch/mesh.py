@@ -20,6 +20,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import params as P_
 from repro.models.config import ModelConfig
 
+# explicit Auto axis types appeared after jax 0.4.x; older Meshes are Auto-only
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _axis_kw(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
+
 V5E = {
     "peak_flops_bf16": 197e12,  # per chip
     "hbm_bw": 819e9,  # bytes/s per chip
@@ -34,19 +44,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-        )
+        return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
     # subset mesh (e.g. single-pod 256 of 512 host devices, or CPU tests)
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
     dev_array = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev_array, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return Mesh(dev_array, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     n = int(np.prod(shape))
     dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev_array, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return Mesh(dev_array, axes, **_axis_kw(len(axes)))
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -1,12 +1,22 @@
-"""Batched serving engine: prefill + decode with slot-based batching.
+"""Batched serving engines: LLM decode slots + MATE discovery batching.
 
-A fixed pool of ``batch`` slots; requests occupy slots, decode steps run for
-the whole pool every tick (tokens for finished/empty slots are masked).  This
-is continuous-batching-lite: static shapes (TPU-friendly), per-slot position
-counters, greedy or temperature sampling.
+Two request classes share the slot-batching philosophy (fixed-size groups,
+one device launch per group):
 
-serve_step (one decode tick) is the unit the dry-run lowers for decode_32k /
-long_500k shapes.
+  * ``ServeEngine`` — prefill + decode with slot-based batching for the model
+    zoo.  A fixed pool of ``batch`` slots; requests occupy slots, decode
+    steps run for the whole pool every tick (tokens for finished/empty slots
+    are masked).  Continuous-batching-lite: static shapes (TPU-friendly),
+    per-slot position counters, greedy or temperature sampling.
+    serve_step (one decode tick) is the unit the dry-run lowers for
+    decode_32k / long_500k shapes.
+
+  * ``DiscoveryEngine`` — multi-query online join discovery.  Queued
+    requests drain in groups of ``batch``; each group's candidate rows and
+    query keys concatenate into ONE super-key filter launch
+    (``core.batched.discover_many``), so concurrent requests amortise the
+    kernel dispatch instead of filtering one query at a time.  Results are
+    bit-identical to per-request ``discover``.
 """
 
 from __future__ import annotations
@@ -18,8 +28,67 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import batched as batched_lib
+from repro.core.corpus import Table
+from repro.core.discovery import DiscoveryStats, TopKEntry
+from repro.core.index import MateIndex
 from repro.models import transformer
 from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class DiscoveryRequest:
+    """One top-k join-discovery request flowing through ``DiscoveryEngine``."""
+
+    query: Table
+    q_cols: list[int]
+    k: int = 10
+    results: list[TopKEntry] | None = None
+    stats: DiscoveryStats | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.results is not None
+
+
+class DiscoveryEngine:
+    """Host-side loop batching concurrent discovery requests.
+
+    ``submit`` queues; ``flush`` drains the queue in groups of ``batch``,
+    each group sharing one filter launch via ``discover_many``.
+    """
+
+    def __init__(self, index: MateIndex, batch: int = 8, use_kernel: bool = True):
+        self.index = index
+        self.batch = batch
+        self.use_kernel = use_kernel
+        self.queue: list[DiscoveryRequest] = []
+
+    def submit(self, query: Table, q_cols: list[int], k: int = 10) -> DiscoveryRequest:
+        req = DiscoveryRequest(query=query, q_cols=q_cols, k=k)
+        self.queue.append(req)
+        return req
+
+    def flush(self) -> list[DiscoveryRequest]:
+        """Serve every queued request; returns them in submission order."""
+        served, self.queue = self.queue, []
+        for start in range(0, len(served), self.batch):
+            group = served[start : start + self.batch]
+            out = batched_lib.discover_many(
+                self.index,
+                [(r.query, r.q_cols) for r in group],
+                k=[r.k for r in group],
+                use_kernel=self.use_kernel,
+            )
+            for req, (entries, stats) in zip(group, out):
+                req.results, req.stats = entries, stats
+        return served
+
+    def discover(self, query: Table, q_cols: list[int], k: int = 10) -> DiscoveryRequest:
+        """One-shot convenience: submit + flush a single request."""
+        req = self.submit(query, q_cols, k)
+        self.flush()
+        return req
 
 
 @dataclasses.dataclass

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import discovery
-from repro.core.batched import discover_batched
+from repro.core.batched import discover_batched, discover_many
 from repro.core.corpus import Corpus, Table
 from repro.core.index import MateIndex
 from repro.data import synthetic
@@ -49,14 +49,65 @@ def test_sci_same_results_more_fps(lake):
     assert s_sci.verified_fp >= s_mate.verified_fp
 
 
-def test_batched_engine_equivalent(lake):
+def test_batched_engine_bit_identical(lake):
+    """Acceptance bar: batched kernel-backed top-k == scalar path exactly —
+    same table ids, same joinability scores, same mappings."""
     corpus, index, query, q_cols, _ = lake
     seq, _ = discovery.discover(index, query, q_cols, k=10)
     for use_kernel in (False, True):
         bat, _ = discover_batched(index, query, q_cols, k=10, use_kernel=use_kernel)
-        assert sorted(e.joinability for e in seq) == sorted(
-            e.joinability for e in bat
+        assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
+            (e.table_id, e.joinability, e.mapping) for e in bat
+        ]
+
+
+def test_batched_small_batches_bit_identical(lake):
+    """Rule-1 between-batch pruning must not change results at any batch size."""
+    corpus, index, query, q_cols, _ = lake
+    seq, _ = discovery.discover(index, query, q_cols, k=5)
+    for batch_tables in (1, 7, 64):
+        bat, _ = discover_batched(
+            index, query, q_cols, k=5, batch_tables=batch_tables, use_kernel=False
         )
+        assert [(e.table_id, e.joinability) for e in seq] == [
+            (e.table_id, e.joinability) for e in bat
+        ], batch_tables
+
+
+def test_discover_many_bit_identical(lake):
+    """One shared filter launch across queries == per-query discovery."""
+    corpus, index, query, q_cols, _ = lake
+    queries = [(query, q_cols)] + synthetic.make_mixed_queries(
+        corpus, 3, 12, 2, seed=21
+    )
+    out = discover_many(index, queries, k=[10, 3, 5, 10])
+    for (q, qc), k_i, (entries, stats) in zip(queries, [10, 3, 5, 10], out):
+        seq, _ = discovery.discover(index, q, qc, k=k_i)
+        assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
+            (e.table_id, e.joinability, e.mapping) for e in entries
+        ]
+        assert stats.tables_fetched > 0
+
+
+def test_discovery_engine_slot_batching(lake):
+    from repro.serve.engine import DiscoveryEngine
+
+    corpus, index, query, q_cols, _ = lake
+    engine = DiscoveryEngine(index, batch=2)
+    reqs = [engine.submit(query, q_cols, k=5) for _ in range(5)]
+    assert not any(r.done for r in reqs)
+    served = engine.flush()
+    assert served == reqs and not engine.queue
+    seq, _ = discovery.discover(index, query, q_cols, k=5)
+    for r in served:
+        assert r.done and r.stats is not None
+        assert [(e.table_id, e.joinability) for e in r.results] == [
+            (e.table_id, e.joinability) for e in seq
+        ]
+    one = engine.discover(query, q_cols, k=5)
+    assert [(e.table_id, e.joinability) for e in one.results] == [
+        (e.table_id, e.joinability) for e in seq
+    ]
 
 
 @pytest.mark.parametrize("hash_name", ["bf", "ht", "murmur", "simhash"])

@@ -69,6 +69,132 @@ def test_update_cell_rehashes():
     assert xash.lanes_to_int(idx.superkeys[0]) == want
 
 
+def _assert_same_index_state(idx: MateIndex, rebuilt: MateIndex):
+    """Incrementally-updated index must equal one built from scratch."""
+    assert np.array_equal(idx.superkeys, rebuilt.superkeys)
+    for value in rebuilt.corpus.value_of:
+        got = sorted(map(tuple, idx.fetch_postings(value).tolist()))
+        want = sorted(map(tuple, rebuilt.fetch_postings(value).tolist()))
+        assert got == want, value
+
+
+def test_insert_table_matches_rebuild():
+    idx = MateIndex(small_corpus())
+    new_cells = [["uk", "cambridge", "new"], ["france", "paris", "w"]]
+    idx.insert_table(new_cells)
+    rebuilt = MateIndex(
+        Corpus(
+            [
+                Table(0, [["uk", "cambridge", "x"], ["japan", "tokyo", "y"]]),
+                Table(1, [["uk", "oxford", "z"]]),
+                Table(2, new_cells),
+            ]
+        )
+    )
+    _assert_same_index_state(idx, rebuilt)
+
+
+def test_update_cell_matches_rebuild():
+    idx = MateIndex(small_corpus())
+    idx.update_cell(0, 0, 1, "london")
+    idx.update_cell(1, 0, 2, "tokyo")  # now shares a value with table 0
+    rebuilt = MateIndex(
+        Corpus(
+            [
+                Table(0, [["uk", "london", "x"], ["japan", "tokyo", "y"]]),
+                Table(1, [["uk", "oxford", "tokyo"]]),
+            ]
+        )
+    )
+    _assert_same_index_state(idx, rebuilt)
+
+
+def test_delete_table_matches_rebuild():
+    """Tombstoned tables vanish from discovery exactly like a rebuild
+    without them (modulo the table-id shift a rebuild causes)."""
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=80, seed=5))
+    query, q_cols, expected, corpus = synthetic.make_query_with_ground_truth(corpus)
+    idx = MateIndex(corpus)
+    topk, _ = discovery.discover(idx, query, q_cols, k=5)
+    victim = topk[0].table_id
+    idx.delete_table(victim)
+
+    kept = [t for t in corpus.tables if t.table_id != victim]
+    new_id = {t.table_id: i for i, t in enumerate(kept)}
+    rebuilt = MateIndex(
+        Corpus([Table(new_id[t.table_id], t.cells, t.name) for t in kept])
+    )
+    got, _ = discovery.discover(idx, query, q_cols, k=5)
+    want, _ = discovery.discover(rebuilt, query, q_cols, k=5)
+    assert victim not in [e.table_id for e in got]
+    assert [(new_id[e.table_id], e.joinability) for e in got] == [
+        (e.table_id, e.joinability) for e in want
+    ]
+
+
+def test_updates_keep_engines_bit_identical():
+    """After a mix of §5.4 updates, scalar and batched engines still agree."""
+    from repro.core.batched import discover_batched, discover_many
+
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=60, seed=9))
+    query, q_cols, _, corpus = synthetic.make_query_with_ground_truth(corpus)
+    idx = MateIndex(corpus)
+    key_cells = [[query.cells[r][c] for c in q_cols] for r in range(query.n_rows)]
+    tid = idx.insert_table([kc + ["extra"] for kc in key_cells])
+    idx.update_cell(tid, 0, len(key_cells[0]), "mutated")
+    idx.delete_table(0)
+
+    seq, _ = discovery.discover(idx, query, q_cols, k=8)
+    assert tid in [e.table_id for e in seq]
+    for use_kernel in (False, True):
+        bat, _ = discover_batched(idx, query, q_cols, k=8, use_kernel=use_kernel)
+        assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
+            (e.table_id, e.joinability, e.mapping) for e in bat
+        ]
+    [(many, _)] = discover_many(idx, [(query, q_cols)], k=8)
+    assert [(e.table_id, e.joinability) for e in many] == [
+        (e.table_id, e.joinability) for e in seq
+    ]
+
+
+def test_gather_candidates_matches_scalar_grouping():
+    """CSR block == the scalar engine's per-value dict grouping."""
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=40, seed=3))
+    idx = MateIndex(corpus)
+    queries = synthetic.make_mixed_queries(corpus, 1, 15, 2, seed=4)
+    (q, q_cols) = queries[0]
+    init_col = discovery.init_column_selection(q, q_cols, "cardinality", idx)
+    values = list(dict.fromkeys(q.column(init_col)))
+
+    by_table = {}
+    for i, v in enumerate(values):
+        for grow, _col in idx.fetch_postings(v).tolist():
+            by_table.setdefault(int(idx.corpus.table_of_row(grow)), []).append(
+                (int(grow), i)
+            )
+    order = sorted(by_table, key=lambda t: (-len(by_table[t]), t))
+
+    block = idx.gather_candidates(values)
+    assert block.table_ids.tolist() == order
+    assert block.n_items == sum(len(v) for v in by_table.values())
+    for t, tid in enumerate(order):
+        s = block.table_slice(t)
+        got = list(zip(block.rows[s].tolist(), block.value_idx[s].tolist()))
+        assert sorted(got) == sorted(by_table[tid])
+
+
+def test_superkey_of_keys_matches_per_value_or():
+    corpus = small_corpus()
+    idx = MateIndex(corpus)
+    keys = [("uk", "cambridge"), ("japan", "tokyo"), ("uk", "oxford")]
+    got = idx.superkey_of_keys(keys)
+    for i, key in enumerate(keys):
+        want = 0
+        for v in key:
+            want |= xash.xash_oracle(v, idx.cfg)
+        assert xash.lanes_to_int(got[i]) == want
+
+
 def test_corpus_char_frequencies():
     corpus = small_corpus()
     freq = corpus.char_frequencies()
