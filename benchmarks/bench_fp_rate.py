@@ -1,0 +1,73 @@
+"""FP-rate vs filter-bandwidth tradeoff across superkey widths.
+
+Paper Tables 1–2 show that widening XASH from 128 to 512 bits cuts
+false-positive rows by an order of magnitude at 4x the filter bandwidth
+(16 uint32 lanes instead of 4).  This harness reproduces that tradeoff on
+the synthetic lake: per width it builds the index, probes every eligible
+(candidate row, query key) pair through the super-key filter WITHOUT top-k
+pruning, verifies every survivor exactly, and reports
+
+  * ``fp_rate``       — false positives per eligible probe (lower = better)
+  * ``fp`` / ``tp``   — raw survivor split
+  * ``fn``            — filter rejections of exact matches (must be 0:
+                        the §6.3 no-false-negative lemma holds at ANY width)
+  * ``filter_bytes_per_row`` — superkey bytes streamed per candidate row
+                        (the bandwidth side of the tradeoff)
+
+Rows persist to ``benchmarks/results/BENCH_fp_rate.json`` so the per-width
+trend accumulates a trajectory across runs (docs/BENCHMARKS.md).
+
+``python -m benchmarks.bench_fp_rate [--quick]`` (--quick: 128/512 only,
+small query group).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+
+WIDTHS = (128, 256, 512)
+
+
+def fp_rate(widths=WIDTHS, groups=None):
+    print("# FP rate vs filter bandwidth per superkey width (Tables 1-2)")
+    out = {}
+    for gname, n_rows in (groups or common.ROWS).items():
+        queries = common.query_group(n_rows)
+        for bits in widths:
+            idx = common.index("xash", bits)
+            agg = common.fp_outcomes(idx, queries, check_false_negatives=True)
+            out[(gname, bits)] = agg
+            common.emit(
+                f"fp/{gname}/xash({bits})", 0.0,
+                f"fp_rate={agg['fp_rate']:.5f};fp={agg['fp']};tp={agg['tp']};"
+                f"fn={agg['fn']};checks={agg['checks']};"
+                f"filter_bytes_per_row={idx.cfg.lanes * 4}",
+            )
+        lo, hi = min(widths), max(widths)
+        a, b = out[(gname, lo)], out[(gname, hi)]
+        ratio = a["fp"] / max(b["fp"], 1)
+        fn_any = max(out[(gname, bits)]["fn"] for bits in widths)
+        common.emit(
+            f"fp/{gname}/trend", 0.0,
+            f"fp_{lo}_over_{hi}={ratio:.1f}x;"
+            f"ordering_ok={b['fp'] < a['fp'] or a['fp'] == 0};"
+            f"fn_any={fn_any}",
+        )
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="128/512 only on the small query group")
+    args = ap.parse_args(argv)
+    widths = (128, 512) if args.quick else WIDTHS
+    groups = {"webtable(10)": common.ROWS["webtable(10)"]} if args.quick else None
+    fp_rate(widths, groups)
+    common.save_trajectory("fp_rate")
+
+
+if __name__ == "__main__":
+    main()

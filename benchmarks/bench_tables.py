@@ -12,6 +12,9 @@ from benchmarks import common
 
 HASHES_128 = ["md5", "murmur", "city", "simhash", "ht", "bf", "xash"]
 HASHES_512 = ["simhash", "ht", "bf", "xash"]
+# gates the 512-bit engine row in table_engines (run.py --quick clears it
+# together with HASHES_512 to skip all 512-bit index builds)
+ENGINE_512 = True
 
 
 def table1_runtime():
@@ -63,15 +66,37 @@ def table_engines():
             dt, st = common.run_discovery(idx, queries, engine=engine)
             times[engine] = dt
             out[(gname, engine)] = (dt, st)
+            # per-batch transfer behaviour (device-side rule 1/2): fraction
+            # of the match matrix materialised on the host — counts vector +
+            # verification slices on the device path.  Undefined for the
+            # scalar engine (no match matrix), so only batched/many rows
+            # carry the field.
+            rb = ""
+            if st["matrix_bytes"]:
+                rb = (
+                    f";match_readback_frac="
+                    f"{st['readback_bytes'] / st['matrix_bytes']:.3f}"
+                )
             common.emit(
                 f"engines/{gname}/{engine}", dt / len(queries) * 1e6,
-                f"precision={st['precision_mean']:.3f};passed={st['passed']}"
+                f"precision={st['precision_mean']:.3f};passed={st['passed']}{rb}"
             )
         common.emit(
             f"engines/{gname}/speedups", 0.0,
             f"batched_vs_seq={times['seq']/times['batched']:.2f}x;"
             f"many_vs_seq={times['seq']/times['many']:.2f}x"
         )
+        # 512-bit end-to-end engine path (16 lanes through the same kernels)
+        if ENGINE_512:
+            idx512 = common.index("xash", 512)
+            common.run_discovery(idx512, queries, engine="batched")  # warm jit
+            dt, st = common.run_discovery(idx512, queries, engine="batched")
+            rb = st["readback_bytes"] / max(st["matrix_bytes"], 1)
+            common.emit(
+                f"engines/{gname}/batched(512)", dt / len(queries) * 1e6,
+                f"precision={st['precision_mean']:.3f};passed={st['passed']};"
+                f"match_readback_frac={rb:.3f};vs_128={times['batched']/dt:.2f}x"
+            )
     return out
 
 

@@ -14,7 +14,7 @@ sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 import numpy as np
 
 from repro.core import discovery, xash
-from repro.core.batched import discover_batched, discover_many
+from repro.core.batched import discover_batched, discover_many, filter_outcomes
 from repro.core.index import MateIndex
 from repro.data import synthetic
 
@@ -55,6 +55,24 @@ def query_group(n_rows: int, key_width: int = 2):
     )
 
 
+def fp_outcomes(idx, queries, check_false_negatives: bool = False) -> dict:
+    """Aggregate unpruned §6.3 filter outcomes over a query group.
+
+    Sums ``core.batched.filter_outcomes`` per query and derives ``fp_rate``
+    (false positives per eligible probe) — the Table 1/2 quantity the
+    hash-width sweep in ``bench_fp_rate.py`` tracks.
+    """
+    agg = {"checks": 0, "passed": 0, "tp": 0, "fp": 0, "fn": 0}
+    for q, q_cols in queries:
+        out = filter_outcomes(
+            idx, q, q_cols, check_false_negatives=check_false_negatives
+        )
+        for key in agg:
+            agg[key] += out[key]
+    agg["fp_rate"] = agg["fp"] / max(agg["checks"], 1)
+    return agg
+
+
 def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     """Returns (seconds_total, aggregate stats).
 
@@ -64,6 +82,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     share one filter launch — the DiscoveryEngine path).
     """
     tp = fp = checks = passed = 0
+    mat_bytes = rb_bytes = 0
     precs = []
     t0 = time.perf_counter()
     if engine == "many":
@@ -84,12 +103,16 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         fp += st.verified_fp
         checks += st.filter_checks
         passed += st.filter_passed
+        mat_bytes += st.filter_matrix_bytes
+        rb_bytes += st.filter_readback_bytes
         precs.append(st.precision)
     return dt, {
         "tp": tp,
         "fp": fp,
         "checks": checks,
         "passed": passed,
+        "matrix_bytes": mat_bytes,
+        "readback_bytes": rb_bytes,
         "precision_mean": float(np.mean(precs)),
         "precision_std": float(np.std(precs)),
     }

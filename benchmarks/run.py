@@ -18,16 +18,24 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="skip 512-bit builds")
     args = ap.parse_args()
 
-    from benchmarks import bench_figures, bench_kernels, bench_tables, common
+    from benchmarks import (
+        bench_figures, bench_fp_rate, bench_kernels, bench_tables, common,
+    )
 
     if args.quick:
         bench_tables.HASHES_512 = []
         bench_tables.HASHES_128 = ["murmur", "ht", "bf", "xash"]
+        bench_tables.ENGINE_512 = False
 
     print("name,us_per_call,derived")
     bench_tables.main()
     bench_figures.main()
     bench_kernels.main()
+    # the width sweep exists to build 512-bit indexes — skipped entirely in
+    # quick mode (run `benchmarks.bench_fp_rate --quick` directly for a
+    # small-group 128/512 trend, as CI's bench job does)
+    if not args.quick:
+        bench_fp_rate.main([])
 
     # roofline summary (requires results/dryrun/*.json from the dry-run)
     try:

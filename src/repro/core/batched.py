@@ -10,19 +10,36 @@ contiguous blocks fed straight to the §6.3 filter kernel:
     (``MateIndex.gather_candidates``): rows, value indices and table
     boundaries as three contiguous arrays — no per-row dict lookups;
   * the row filter runs as one subsumption launch per table batch through
-    ``kernels.ops.filter_match_auto`` (Pallas ``filter_kernel`` on TPU,
-    vectorised XLA fallback on CPU); value/key eligibility is a precomputed
-    boolean gather, so match extraction is ``np.nonzero`` — no Python loop
-    over posting-list items;
+    ``kernels.ops.filter_hits_table_counts`` (Pallas ``filter_kernel`` on
+    TPU, vectorised XLA fallback on CPU); value/key eligibility is a
+    precomputed boolean gather fused into the launch, so match extraction is
+    ``np.nonzero`` over per-table slices — no Python loop over PL items;
+  * the rule-1/rule-2 joinability bound check is DEVICE-SIDE in
+    ``discover_batched``: each launch also reduces the match matrix to
+    per-table eligible-hit counts (a matvec row-reduction + segment-sum over
+    the CSR table ids), and only that tiny int32 counts vector is read back
+    per batch.  The full ``[rows × keys]`` match matrix is never transferred
+    to the host — per surviving (un-pruned) table, just its row slice of the
+    hit matrix is read back for exact verification (or one prefetch of the
+    batch when the entry bound leaves most items alive anyway);
+    ``discover_many`` deliberately keeps the single-transfer design instead:
+    every request's heap starts empty, so every plan's hit block is needed
+    regardless of pruning and fused device counts would save no bytes;
   * tables are visited in the same descending posting-list order as
     Algorithm 1; rule 1 (global cutoff) applies BETWEEN batches — identical
     pruning guarantee, since the bound only improves as the scan proceeds;
   * rule 2 becomes a *stronger* bound: the exact filtered-candidate count per
-    table (free from the batch filter) replaces the paper's incremental
+    table (the device-side counts vector) replaces the paper's incremental
     ``L_t - r_checked + r_match`` bound, so strictly more tables are skipped
     before verification;
   * only filter-surviving pairs are verified on the host (same exact
     ``calculateJ`` as the faithful engine).
+
+Hash width is a first-class knob: every array here is ``lanes``-wide
+(``XashConfig(bits=...)`` → 4/8/16 uint32 lanes for 128/256/512 bits), so the
+same engine and kernels serve any width the index was built at — the paper's
+Table 1/2 FP-rate vs filter-bandwidth tradeoff (see
+``benchmarks/bench_fp_rate.py``).
 
 ``discover_many`` extends this to multi-query batching: all requests' rows
 and keys concatenate into ONE filter launch, then demux per request — the
@@ -96,10 +113,30 @@ def plan_query(
     return QueryPlan(query, q_cols, distinct_keys, q_sk, block, elig, stats)
 
 
-def _filter(row_sk: np.ndarray, q_sk: np.ndarray, use_kernel: bool) -> np.ndarray:
-    if use_kernel:
-        return ops.filter_match_auto(row_sk, q_sk)
-    return ops.subsume_np(row_sk, q_sk)
+def _segment_ids(table_ptr: np.ndarray, t_start: int, t_stop: int) -> np.ndarray:
+    """int32 per-item table index (relative to t_start) for a CSR range."""
+    lengths = np.diff(table_ptr[t_start : t_stop + 1])
+    return np.repeat(
+        np.arange(t_stop - t_start, dtype=np.int32), lengths
+    )
+
+
+def _hits_counts_host(row_sk, q_sk, elig, seg, n_tables, use_kernel):
+    """Host-side hits + per-table counts: one filter launch, full readback.
+
+    The right call when the top-k bound cannot prune yet (heap not full) —
+    every hit block is about to be verified anyway, so fusing the count
+    reduction into the launch would add device work without saving a byte.
+    """
+    if not use_kernel:
+        return ops.filter_hits_table_counts(
+            row_sk, q_sk, elig, seg, n_tables, use_device=False
+        )
+    hits = ops.filter_match_auto(row_sk, q_sk) & elig
+    counts = np.bincount(
+        seg, weights=hits.sum(axis=1), minlength=max(n_tables, 1)
+    ).astype(np.int32)
+    return hits, counts[:n_tables]
 
 
 def _calculate_j(
@@ -164,29 +201,68 @@ class _TopK:
         return out
 
 
+# below this fraction of batch items surviving the entry bound, per-table
+# hit-slice readbacks beat one whole-batch transfer (dispatch vs bytes)
+_PREFETCH_FRAC = 0.25
+
+
 def _score_tables(
     index: MateIndex,
     plan: QueryPlan,
     topk: _TopK,
-    hits: np.ndarray,
+    hits,
+    counts: np.ndarray,
     rows: np.ndarray,
     t_start: int,
     t_stop: int,
     base: int,
+    rule1: bool = False,
 ) -> None:
     """Verify (or rule-2-prune) tables [t_start, t_stop) of the plan's block,
-    whose items live at ``block`` offsets ``base:`` covered by hits/rows."""
+    whose items live at ``block`` offsets ``base:`` covered by hits/rows.
+
+    ``hits`` may be device-resident (jnp) and is only read back as needed:
+    the rule-2 bound is checked against ``counts`` (the device-computed
+    per-table eligible-hit counts, indexed relative to ``t_start``), so
+    pruned tables never transfer their slice.  When the bound at entry
+    leaves most items alive anyway, the whole range is prefetched in ONE
+    transfer instead of per-table dispatches; counts are exact, so the
+    evolving-bound pruning decisions below are identical either way.
+
+    ``rule1=True`` additionally applies the paper's rule 1 inside the range
+    (tables are PL-desc sorted → the first at/below the bound prunes the
+    whole suffix) — the ``discover_many`` path, where the filter already ran
+    for every table and only verification work remains to be skipped.
+    """
     block, stats = plan.block, plan.stats
     ptr = block.table_ptr
+    device_hits = not isinstance(hits, np.ndarray)
+    if device_hits:
+        bound0 = topk.bound() if topk.full else -1
+        alive = counts[: t_stop - t_start] > bound0
+        n_alive = int(
+            (alive * np.diff(ptr[t_start : t_stop + 1])).sum()
+        )
+        total = int(ptr[t_stop] - ptr[t_start])
+        if total and n_alive >= _PREFETCH_FRAC * total:
+            hits = np.asarray(hits)
+            stats.filter_readback_bytes += hits.size
+            device_hits = False
     for t in range(t_start, t_stop):
+        if rule1 and topk.full and int(ptr[t + 1] - ptr[t]) <= topk.bound():
+            stats.tables_pruned_rule1 += t_stop - t
+            break
         stats.tables_evaluated += 1
         tid = int(block.table_ids[t])
         lo, hi = int(ptr[t]) - base, int(ptr[t + 1]) - base
-        sub = hits[lo:hi]
-        # strengthened rule 2: exact filtered-candidate count bound
-        if topk.full and int(sub.sum()) <= topk.bound():
+        # strengthened rule 2: exact filtered-candidate count bound, from the
+        # device-side counts — no match-matrix transfer for pruned tables.
+        if topk.full and int(counts[t - t_start]) <= topk.bound():
             stats.tables_pruned_rule2 += 1
             continue
+        sub = np.asarray(hits[lo:hi])
+        if device_hits:
+            stats.filter_readback_bytes += sub.size
         joinability, mapping = _calculate_j(index, plan, rows[lo:hi], sub)
         topk.offer(tid, joinability, mapping)
 
@@ -200,7 +276,14 @@ def discover_batched(
     init_mode: str = "cardinality",
     use_kernel: bool = True,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
-    """Batched Algorithm 1: one filter launch per ``batch_tables`` tables."""
+    """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
+
+    Per batch, the device computes the subsumption matrix ∧ eligibility AND
+    reduces it to per-table hit counts; only that counts vector (4 bytes per
+    table) is read back for the rule-1/rule-2 bound checks.  Hit-matrix
+    slices are transferred solely for tables that survive pruning and need
+    exact verification.
+    """
     plan = plan_query(index, query, q_cols, init_mode)
     stats, block = plan.stats, plan.block
     topk = _TopK(k)
@@ -209,6 +292,7 @@ def discover_batched(
         stop = min(start + batch_tables, n_tables)
         # rule 1 between batches: tables are PL-desc sorted, so if the FIRST
         # table of the batch is at/below the bound, everything after is too.
+        # (PL lengths are CSR metadata the host already owns — no transfer.)
         first_count = int(block.table_ptr[start + 1] - block.table_ptr[start])
         if topk.full and first_count <= topk.bound():
             stats.tables_pruned_rule1 += n_tables - start
@@ -217,11 +301,33 @@ def discover_batched(
         rows = block.rows[lo:hi]
         row_sk = index.superkey_of_rows(rows)
         elig = plan.elig[lo:hi]
-        hits = _filter(row_sk, plan.q_sk, use_kernel) & elig
+        seg = _segment_ids(block.table_ptr, start, stop)
         stats.pl_items_checked += int(rows.shape[0])
         stats.filter_checks += int(elig.sum())
-        stats.filter_passed += int(hits.sum())
-        _score_tables(index, plan, topk, hits, rows, start, stop, lo)
+        stats.filter_matrix_bytes += int(elig.size)
+        if use_kernel and topk.full and topk.bound() > 0:
+            # bound can prune → fused device launch: hits stay on device,
+            # only the per-table counts vector is read back; surviving
+            # tables' slices transfer lazily in _score_tables.
+            hits, counts = ops.filter_hits_table_counts(
+                row_sk, plan.q_sk, elig, seg, stop - start
+            )
+        else:
+            # heap not full (bound 0): nothing can be pruned, every hit
+            # block is about to be verified — single-transfer path.
+            hits, counts = _hits_counts_host(
+                row_sk, plan.q_sk, elig, seg, stop - start, use_kernel
+            )
+        # readback = match-matrix bytes materialised host-side: the whole
+        # matrix when any path produced host hits (size-based numpy
+        # dispatch included), else the counts vector now + surviving
+        # slices lazily in _score_tables.
+        if isinstance(hits, np.ndarray):
+            stats.filter_readback_bytes += hits.size
+        else:
+            stats.filter_readback_bytes += counts.nbytes
+        stats.filter_passed += int(counts.sum())
+        _score_tables(index, plan, topk, hits, counts, rows, start, stop, lo)
     return topk.entries(), stats
 
 
@@ -250,30 +356,119 @@ def discover_many(
     ks = [k] * len(queries) if isinstance(k, int) else list(k)
     assert len(ks) == len(queries)
     plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
+    n_tables_all = 0
     if plans:
         rows_all = np.concatenate([p.block.rows for p in plans])
         q_all = np.concatenate([p.q_sk for p in plans])
-        match = _filter(index.superkey_of_rows(rows_all), q_all, use_kernel)
+        # block-diagonal eligibility (a request's keys only probe its own
+        # candidate rows) + a global per-item table index for the one-pass
+        # per-table rule-1/2 count reduction below.
+        elig_all = np.zeros((rows_all.shape[0], q_all.shape[0]), dtype=bool)
+        seg_all = np.zeros(rows_all.shape[0], dtype=np.int32)
+        r_off = k_off = 0
+        for p in plans:
+            ni, ki, ti = p.block.n_items, p.q_sk.shape[0], p.block.n_tables
+            elig_all[r_off : r_off + ni, k_off : k_off + ki] = p.elig
+            if ni:
+                seg_all[r_off : r_off + ni] = n_tables_all + _segment_ids(
+                    p.block.table_ptr, 0, ti
+                )
+            r_off += ni
+            k_off += ki
+            n_tables_all += ti
+        # ONE subsumption launch for the whole group.  Unlike
+        # ``discover_batched`` (whose later batches are often pruned without
+        # any matrix transfer), every request here starts with an empty heap
+        # (entry bound 0), so every plan's hit block is needed for
+        # verification regardless of pruning — the matrix comes back to the
+        # host in one transfer and the per-table rule-1/2 counts are a cheap
+        # host reduction over it; fusing them into the launch would only add
+        # device work without saving a byte of readback.
+        hits_all, counts_all = _hits_counts_host(
+            index.superkey_of_rows(rows_all), q_all, elig_all, seg_all,
+            n_tables_all, use_kernel,
+        )
     out: list[tuple[list[TopKEntry], DiscoveryStats]] = []
-    r_off = k_off = 0
+    r_off = k_off = t_off = 0
     for plan, k_i in zip(plans, ks):
         n_items, n_keys = plan.block.n_items, plan.q_sk.shape[0]
-        sub = match[r_off : r_off + n_items, k_off : k_off + n_keys]
+        stats, block = plan.stats, plan.block
+        hits = hits_all[r_off : r_off + n_items, k_off : k_off + n_keys]
+        counts = counts_all[t_off : t_off + block.n_tables]
         r_off += n_items
         k_off += n_keys
-        hits = sub & plan.elig
-        stats, block = plan.stats, plan.block
+        t_off += block.n_tables
         stats.pl_items_checked = n_items
         stats.filter_checks = int(plan.elig.sum())
-        stats.filter_passed = int(hits.sum())
+        stats.filter_passed = int(counts.sum())
+        # the shared launch computes (and reads back) this plan's rows
+        # against the GROUP's keys — the documented cross-product trade.
+        stats.filter_matrix_bytes += n_items * hits_all.shape[1]
+        stats.filter_readback_bytes += n_items * hits_all.shape[1]
         topk = _TopK(k_i)
-        for t in range(block.n_tables):
-            # rule 1: tables PL-desc sorted → bound prunes the whole suffix
-            # (verification work only; the filter already ran batched).
-            count = int(block.table_ptr[t + 1] - block.table_ptr[t])
-            if topk.full and count <= topk.bound():
-                stats.tables_pruned_rule1 += block.n_tables - t
-                break
-            _score_tables(index, plan, topk, hits, block.rows, t, t + 1, 0)
+        # rule 1 (PL-desc suffix pruning) applies inside the range: the
+        # filter already ran batched for every table, only verification work
+        # and hit-slice readbacks remain to be skipped.
+        _score_tables(
+            index, plan, topk, hits, counts, block.rows, 0, block.n_tables, 0,
+            rule1=True,
+        )
         out.append((topk.entries(), stats))
+    return out
+
+
+def filter_outcomes(
+    index: MateIndex,
+    query: Table,
+    q_cols: list[int],
+    init_mode: str = "cardinality",
+    check_false_negatives: bool = False,
+) -> dict[str, int]:
+    """Unpruned §6.3 filter quality for one query — the paper's Table 1/2
+    false-positive measurement at whatever hash width the index was built at.
+
+    Every eligible (candidate row, query key) pair is probed through the
+    super-key filter and every surviving pair is verified exactly; no top-k
+    pruning interferes, so counts are a property of the hash alone.
+
+    Returns counts: ``checks`` (eligible probes), ``passed`` (filter
+    survivors), ``tp`` / ``fp`` (survivors that pass / fail exact key
+    comparison), and — when ``check_false_negatives`` — ``fn``: eligible
+    pairs that verify exactly but were REJECTED by the filter (always 0 for
+    any OR-aggregated hash; the §6.3 no-false-negative lemma).
+    """
+    plan = plan_query(index, query, q_cols, init_mode)
+    out = {
+        "checks": int(plan.elig.sum()),
+        "passed": 0,
+        "tp": 0,
+        "fp": 0,
+        "fn": 0,
+        "items": plan.block.n_items,
+        "keys": len(plan.distinct_keys),
+    }
+    if plan.block.n_items == 0 or not plan.distinct_keys:
+        return out
+    row_sk = index.superkey_of_rows(plan.block.rows)
+    hits = ops.subsume_np(row_sk, plan.q_sk) & plan.elig
+    out["passed"] = int(hits.sum())
+    corpus = index.corpus
+    row_values_cache: dict[int, list[str]] = {}
+
+    def _matches(r: int, kid: int) -> bool:
+        grow = int(plan.block.rows[r])
+        vals = row_values_cache.get(grow)
+        if vals is None:
+            vals = row_values_cache[grow] = corpus.row_values(grow)
+        return bool(seq._verify_pair(plan.distinct_keys[kid], vals))
+
+    for r, kid in zip(*np.nonzero(hits)):
+        if _matches(int(r), int(kid)):
+            out["tp"] += 1
+        else:
+            out["fp"] += 1
+    if check_false_negatives:
+        for r, kid in zip(*np.nonzero(plan.elig & ~hits)):
+            if _matches(int(r), int(kid)):
+                out["fn"] += 1
     return out

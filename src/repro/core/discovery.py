@@ -35,6 +35,19 @@ class DiscoveryStats:
     filter_passed: int = 0  # pairs surviving the row filter
     verified_tp: int = 0  # pairs passing exact verification
     verified_fp: int = 0  # pairs surviving filter but failing verification
+    # batched-engine transfer accounting (device-side rule 1/2):
+    filter_matrix_bytes: int = 0  # full match-matrix bytes the filter produced
+    filter_readback_bytes: int = 0  # match bytes materialised host-side
+    # (counts vectors + verification slices on the device path; the whole
+    # matrix when a host/numpy dispatch produced it directly)
+
+    @property
+    def readback_frac(self) -> float:
+        """Fraction of the match matrix materialised on the host (batched
+        engines; ~1.0 is the transfer-everything behaviour)."""
+        if not self.filter_matrix_bytes:
+            return 0.0
+        return self.filter_readback_bytes / self.filter_matrix_bytes
 
     @property
     def precision(self) -> float:

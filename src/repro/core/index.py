@@ -113,12 +113,10 @@ class MateIndex:
         use_corpus_char_freq: bool = False,
     ):
         if use_corpus_char_freq and hash_name == "xash":
-            cfg = xash.XashConfig(
-                bits=cfg.bits,
-                n_unique=cfg.n_unique,
-                n_ones=cfg.n_ones,
-                char_freq=tuple(corpus.char_frequencies().tolist()),
-                max_len=cfg.max_len,
+            # replace() keeps every other knob (bits/width, ablation flags)
+            # of the caller's config intact.
+            cfg = dataclasses.replace(
+                cfg, char_freq=tuple(corpus.char_frequencies().tolist())
             )
         self.corpus = corpus
         self.cfg = cfg
@@ -148,6 +146,11 @@ class MateIndex:
             if hi > lo:
                 self.postings[vid] = payload[lo:hi]
         self._deleted_tables: set[int] = set()
+
+    @property
+    def bits(self) -> int:
+        """Hash width this index was built at (128/256/512 → 4/8/16 lanes)."""
+        return self.cfg.bits
 
     # -- online-side hashing --------------------------------------------------
 

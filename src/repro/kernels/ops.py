@@ -7,6 +7,9 @@ the kernels run everywhere; on TPU backends the real Mosaic path is used).
 
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,9 +18,23 @@ from repro.core import encoding
 from repro.core.xash import DEFAULT_CONFIG, XashConfig
 from repro.kernels import filter_kernel, xash_kernel
 
+# Force the row-filter dispatch path (CI matrix / debugging):
+#   MATE_FILTER_BACKEND=pallas  -> Pallas filter_kernel (interpret mode off-TPU)
+#   MATE_FILTER_BACKEND=xla     -> vectorised XLA subsumption
+#   MATE_FILTER_BACKEND=numpy   -> host-side numpy oracle
+_BACKEND_ENV = "MATE_FILTER_BACKEND"
+
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _filter_backend() -> str:
+    """'pallas' | 'xla' | 'numpy' | 'auto' (size-based numpy/xla split)."""
+    forced = os.environ.get(_BACKEND_ENV, "").strip().lower()
+    if forced in ("pallas", "xla", "numpy"):
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "auto"
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
@@ -149,6 +166,18 @@ def _pow2_bucket(size: int, minimum: int) -> int:
     return b
 
 
+# finer bucketing for the fused hits+counts launch: pow2 up to 8k, then 8k
+# steps — the padded rows cost real compute (subsume + reductions), and at
+# pow2 granularity that waste approaches 2x; still O(few) compiled shapes.
+_BUCKET_STEP = 8192
+
+
+def _bucket(size: int, minimum: int) -> int:
+    if size <= _BUCKET_STEP:
+        return _pow2_bucket(size, minimum)
+    return -(-size // _BUCKET_STEP) * _BUCKET_STEP
+
+
 def filter_match_auto(
     row_sk: np.ndarray | jnp.ndarray,
     query_sk: np.ndarray | jnp.ndarray,
@@ -160,13 +189,18 @@ def filter_match_auto(
     subsumption instead of the Pallas interpreter, which is orders of
     magnitude slower per launch.  Tiny blocks (< ~100k probes) short-circuit
     to numpy, where the XLA dispatch latency alone would dominate.
+    ``MATE_FILTER_BACKEND`` pins one path (the CI matrix uses it to exercise
+    interpret-mode Pallas on CPU hosts).
     """
     n, q = row_sk.shape[0], query_sk.shape[0]
     if n == 0 or q == 0:
         return np.zeros((n, q), dtype=bool)
-    if jax.default_backend() != "tpu":
-        if n * q < _MIN_XLA_PROBES:
-            return subsume_np(row_sk, query_sk)
+    backend = _filter_backend()
+    if backend == "auto":
+        backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"
+    if backend == "numpy":
+        return subsume_np(row_sk, query_sk)
+    if backend == "xla":
         rows = _pad_to(
             jnp.asarray(row_sk, jnp.uint32), 0, _pow2_bucket(n, _FALLBACK_MIN_N)
         )
@@ -175,6 +209,109 @@ def filter_match_auto(
         )
         return np.asarray(_subsume_block(rows, qry))[:n, :q]
     return np.asarray(filter_match(row_sk, query_sk))
+
+
+def _per_table_counts(hits, seg, num_segments: int):
+    """Per-table eligible-hit counts from a bool[n, q] hits matrix.
+
+    The row reduction runs as an f32 matvec — on CPU XLA that lowers to a
+    BLAS gemv and is ~1.6x faster end-to-end than an integer row sum, which
+    forces a second un-fused pass over the matrix.  f32 is exact here
+    (row sums are bounded by q « 2^24).
+    """
+    ones = jnp.ones((hits.shape[1], 1), jnp.float32)
+    per_row = (hits.astype(jnp.float32) @ ones)[:, 0].astype(jnp.int32)
+    return jax.ops.segment_sum(per_row, seg, num_segments=num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def _hits_counts_block(row_sk, query_sk, elig, seg, *, num_segments: int):
+    """Subsumption ∧ eligibility plus per-table hit counts, all on device."""
+    hits = jnp.all((query_sk[None, :, :] & ~row_sk[:, None, :]) == 0, axis=-1) & elig
+    return hits, _per_table_counts(hits, seg, num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def _combine_counts(match, elig, seg, *, num_segments: int):
+    """Same reduction as ``_hits_counts_block`` over a precomputed match."""
+    hits = match.astype(jnp.bool_) & elig
+    return hits, _per_table_counts(hits, seg, num_segments)
+
+
+def filter_hits_table_counts(
+    row_sk: np.ndarray | jnp.ndarray,
+    query_sk: np.ndarray | jnp.ndarray,
+    elig: np.ndarray,
+    seg_ids: np.ndarray,
+    n_tables: int,
+    *,
+    use_device: bool = True,
+) -> tuple[np.ndarray | jnp.ndarray, np.ndarray]:
+    """Device-side inputs for the §6.2 bound checks: eligible filter hits plus
+    per-table hit counts, WITHOUT transferring the match matrix to the host.
+
+    Args:
+      row_sk:   uint32[n, lanes] candidate-row super keys.
+      query_sk: uint32[q, lanes] query-key super keys.
+      elig:     bool[n, q] init-value eligibility per (item, key) pair.
+      seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
+      n_tables: number of tables covered by this block.
+      use_device: False forces the host numpy path (engines' ``use_kernel``).
+    Returns:
+      (hits, counts) — ``hits`` bool[n, q] stays device-resident on the
+      XLA/Pallas paths (slice it per surviving table; only those slices are
+      ever read back); ``counts`` int32[n_tables] is the one per-batch host
+      readback the rule-1/rule-2 bounds consume.
+    """
+    n, q = row_sk.shape[0], query_sk.shape[0]
+    if n == 0 or q == 0 or n_tables == 0:
+        return np.zeros((n, q), dtype=bool), np.zeros(n_tables, dtype=np.int32)
+    backend = _filter_backend() if use_device else "numpy"
+    if backend == "auto":
+        backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"
+    if backend == "numpy":
+        hits = subsume_np(row_sk, query_sk) & np.asarray(elig, dtype=bool)
+        counts = np.bincount(
+            np.asarray(seg_ids, dtype=np.int64),
+            weights=hits.sum(axis=1),
+            minlength=n_tables,
+        ).astype(np.int32)
+        return hits, counts[:n_tables]
+    # bucket every dim so XLA compiles O(few) distinct shapes; padded
+    # rows/queries have elig False, so their (arbitrary) super keys and the
+    # segment-0 padding of seg_ids contribute nothing to hits or counts.
+    nb = _bucket(n, _FALLBACK_MIN_N)
+    qb = _pow2_bucket(q, _FALLBACK_MIN_Q)
+    tb = _pow2_bucket(n_tables, 16)
+    rows_p = np.zeros((nb, row_sk.shape[1]), dtype=np.uint32)
+    rows_p[:n] = row_sk
+    qry_p = np.zeros((qb, query_sk.shape[1]), dtype=np.uint32)
+    qry_p[:q] = query_sk
+    elig_p = np.zeros((nb, qb), dtype=bool)
+    elig_p[:n, :q] = elig
+    seg_p = np.zeros(nb, dtype=np.int32)
+    seg_p[:n] = seg_ids
+    if backend == "pallas":
+        interpret = _on_cpu()
+        match = filter_kernel.filter_match(
+            jnp.asarray(rows_p).T,
+            jnp.asarray(qry_p).T,
+            block_n=min(nb, filter_kernel.DEFAULT_BLOCK_N),
+            block_q=min(qb, filter_kernel.DEFAULT_BLOCK_Q),
+            interpret=interpret,
+        )
+        hits, counts = _combine_counts(
+            match, jnp.asarray(elig_p), jnp.asarray(seg_p), num_segments=tb
+        )
+    else:
+        hits, counts = _hits_counts_block(
+            jnp.asarray(rows_p),
+            jnp.asarray(qry_p),
+            jnp.asarray(elig_p),
+            jnp.asarray(seg_p),
+            num_segments=tb,
+        )
+    return hits[:n, :q], np.asarray(counts)[:n_tables]
 
 
 def filter_count(

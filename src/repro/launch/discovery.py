@@ -1,5 +1,6 @@
 """MATE discovery service driver:
-``python -m repro.launch.discovery [--n-tables 400] [--queries 5] [--hash xash]``
+``python -m repro.launch.discovery [--n-tables 400] [--queries 5] [--hash xash]
+[--bits 128|256|512]``
 
 End-to-end run of the paper's system on a synthetic lake: build the index
 (offline phase), run top-k n-ary join discovery (online phase) with both the
@@ -19,7 +20,7 @@ import numpy as np
 
 import jax
 
-from repro.core import discovery
+from repro.core import discovery, xash
 from repro.core.batched import discover_batched
 from repro.core.index import MateIndex
 from repro.core import distributed
@@ -37,6 +38,8 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--hash", default="xash",
                     choices=["xash", "bf", "ht", "murmur", "md5", "city", "simhash"])
+    ap.add_argument("--bits", type=int, default=128, choices=[128, 256, 512],
+                    help="superkey hash width (uint32 lanes = bits/32)")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args(argv)
@@ -46,17 +49,19 @@ def main(argv=None):
         synthetic.SyntheticSpec(n_tables=args.n_tables, seed=args.seed)
     )
     t0 = time.time()
-    index = MateIndex(corpus, hash_name=args.hash, use_corpus_char_freq=True)
+    cfg = xash.XashConfig(bits=args.bits)
+    index = MateIndex(corpus, cfg=cfg, hash_name=args.hash, use_corpus_char_freq=True)
     print(
         f"[mate] offline phase: indexed {corpus.total_rows} rows, "
         f"{len(corpus.unique_values)} unique values in {time.time()-t0:.2f}s "
-        f"(hash={args.hash})"
+        f"(hash={args.hash}, bits={index.bits}, lanes={index.cfg.lanes})"
     )
 
     queries = synthetic.make_mixed_queries(
         corpus, args.queries, args.rows, args.key_width, seed=args.seed + 2
     )
-    agg = {"tp": 0, "fp": 0, "checks": 0, "t_seq": 0.0, "t_batched": 0.0}
+    agg = {"tp": 0, "fp": 0, "checks": 0, "t_seq": 0.0, "t_batched": 0.0,
+           "mat_bytes": 0, "rb_bytes": 0}
     for qi, (q, q_cols) in enumerate(queries):
         t0 = time.time()
         topk_seq, st = discovery.discover(index, q, q_cols, k=args.k)
@@ -67,6 +72,8 @@ def main(argv=None):
         agg["tp"] += st.verified_tp
         agg["fp"] += st.verified_fp
         agg["checks"] += st.filter_checks
+        agg["mat_bytes"] += stb.filter_matrix_bytes
+        agg["rb_bytes"] += stb.filter_readback_bytes
         match = [(e.table_id, e.joinability) for e in topk_seq] == [
             (e.table_id, e.joinability) for e in topk_bat
         ]
@@ -79,7 +86,9 @@ def main(argv=None):
     print(
         f"[mate] total: precision={prec:.3f} filter_checks={agg['checks']} "
         f"seq={agg['t_seq']:.2f}s batched={agg['t_batched']:.2f}s "
-        f"speedup={agg['t_seq']/max(agg['t_batched'],1e-9):.1f}x"
+        f"speedup={agg['t_seq']/max(agg['t_batched'],1e-9):.1f}x "
+        f"match_readback={agg['rb_bytes']}/{agg['mat_bytes']}B "
+        f"({agg['rb_bytes']/max(agg['mat_bytes'],1):.1%} of full matrix)"
     )
 
     # multi-query serving path: requests share filter launches in slot

@@ -55,7 +55,10 @@ class DiscoveryEngine:
     """Host-side loop batching concurrent discovery requests.
 
     ``submit`` queues; ``flush`` drains the queue in groups of ``batch``,
-    each group sharing one filter launch via ``discover_many``.
+    each group sharing one filter launch via ``discover_many``.  The engine
+    serves whatever hash width its index was built at (``bits``): group
+    launches, device-side rule-1/2 counts and verification slices are all
+    ``lanes``-wide, so a 512-bit lake and a 128-bit lake run the same code.
     """
 
     def __init__(self, index: MateIndex, batch: int = 8, use_kernel: bool = True):
@@ -63,6 +66,11 @@ class DiscoveryEngine:
         self.batch = batch
         self.use_kernel = use_kernel
         self.queue: list[DiscoveryRequest] = []
+
+    @property
+    def bits(self) -> int:
+        """Superkey hash width of the underlying index."""
+        return self.index.cfg.bits
 
     def submit(self, query: Table, q_cols: list[int], k: int = 10) -> DiscoveryRequest:
         req = DiscoveryRequest(query=query, q_cols=q_cols, k=k)

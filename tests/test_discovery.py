@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import discovery
+from repro.core import discovery, xash
 from repro.core.batched import discover_batched, discover_many
 from repro.core.corpus import Corpus, Table
 from repro.core.index import MateIndex
@@ -16,6 +16,14 @@ def lake():
     corpus = synthetic.make_corpus(spec)
     query, q_cols, expected, corpus = synthetic.make_query_with_ground_truth(corpus)
     index = MateIndex(corpus)
+    return corpus, index, query, q_cols, expected
+
+
+@pytest.fixture(scope="module")
+def lake512(lake):
+    """Same corpus/query, indexed at 512-bit (16-lane) super keys."""
+    corpus, _index, query, q_cols, expected = lake
+    index = MateIndex(corpus, cfg=xash.XashConfig(bits=512))
     return corpus, index, query, q_cols, expected
 
 
@@ -108,6 +116,83 @@ def test_discovery_engine_slot_batching(lake):
     assert [(e.table_id, e.joinability) for e in one.results] == [
         (e.table_id, e.joinability) for e in seq
     ]
+
+
+def test_512bit_engines_bit_identical(lake512):
+    """512-bit end-to-end: discover_batched, discover_many and
+    DiscoveryEngine.flush all match the scalar Algorithm 1 scan exactly,
+    mirroring the 128-bit assertions above (ids, scores, mappings)."""
+    from repro.serve.engine import DiscoveryEngine
+
+    corpus, index, query, q_cols, _ = lake512
+    assert index.bits == 512 and index.cfg.lanes == 16
+    assert index.superkeys.shape[1] == 16
+    seq, _ = discovery.discover(index, query, q_cols, k=10)
+    want = [(e.table_id, e.joinability, e.mapping) for e in seq]
+    for use_kernel in (False, True):
+        bat, _ = discover_batched(index, query, q_cols, k=10, use_kernel=use_kernel)
+        assert [(e.table_id, e.joinability, e.mapping) for e in bat] == want
+    out = discover_many(index, [(query, q_cols)] * 3, k=10)
+    for entries, _stats in out:
+        assert [(e.table_id, e.joinability, e.mapping) for e in entries] == want
+    engine = DiscoveryEngine(index, batch=2)
+    assert engine.bits == 512
+    reqs = [engine.submit(query, q_cols, k=10) for _ in range(3)]
+    engine.flush()
+    for r in reqs:
+        assert [(e.table_id, e.joinability, e.mapping) for e in r.results] == want
+
+
+def test_512bit_topk_matches_bruteforce(lake512):
+    """No width ever changes the result set — only the FP rate (§6.3)."""
+    corpus, index, query, q_cols, _ = lake512
+    topk, _ = discovery.discover(index, query, q_cols, k=10)
+    bf = discovery.topk_bruteforce(corpus, query, q_cols, 10)
+    assert [(e.table_id, e.joinability) for e in topk] == bf
+
+
+def test_batched_readback_accounting(lake):
+    """Device-side rule-1/2: the batched engine accounts for match-matrix
+    bytes and reads back at most the full matrix (counts + verify slices)."""
+    corpus, index, query, q_cols, _ = lake
+    _, st = discover_batched(index, query, q_cols, k=5)
+    assert st.filter_matrix_bytes > 0
+    # at most: every table verified (its full slice) + 4 count bytes/table
+    assert st.filter_readback_bytes <= (
+        st.filter_matrix_bytes + 4 * st.tables_fetched
+    )
+
+
+def test_score_tables_reads_back_only_surviving_slices(lake, monkeypatch):
+    """Pins the device-side rule-2 contract directly: with device-resident
+    hits and a full heap, ONLY un-pruned tables' hit slices are transferred
+    (prefetch disabled by the low alive fraction)."""
+    import jax.numpy as jnp
+
+    from repro.core import batched as B
+
+    corpus, index, query, q_cols, _ = lake
+    plan = B.plan_query(index, query, q_cols)
+    block = plan.block
+    assert block.n_tables >= 3
+    t_stop = min(block.n_tables, 8)
+    n_items = int(block.table_ptr[t_stop])
+    k = len(plan.distinct_keys)
+    hits_dev = jnp.zeros((n_items, k), dtype=bool)  # device-resident
+
+    topk = B._TopK(1)
+    topk.offer(10_000, 5, None)  # full heap, bound 5
+    # exactly one table above the bound -> exactly its slice is read back
+    counts = np.zeros(t_stop, dtype=np.int32)
+    counts[t_stop - 1] = 6
+    survivor_items = int(block.table_ptr[t_stop] - block.table_ptr[t_stop - 1])
+    monkeypatch.setattr(B, "_PREFETCH_FRAC", 1.1)  # force per-table path
+    st0 = plan.stats.filter_readback_bytes
+    B._score_tables(
+        index, plan, topk, hits_dev, counts, block.rows[:n_items], 0, t_stop, 0
+    )
+    assert plan.stats.filter_readback_bytes - st0 == survivor_items * k
+    assert plan.stats.tables_pruned_rule2 == t_stop - 1
 
 
 @pytest.mark.parametrize("hash_name", ["bf", "ht", "murmur", "simhash"])

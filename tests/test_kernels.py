@@ -84,6 +84,66 @@ def test_filter_count_zero_query_edge():
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("bits", [128, 256, 512])
+def test_filter_count_all_zero_queries_across_widths(bits):
+    """All-zero (empty-string key) query superkeys subsume EVERY row —
+    including the rows the wrapper pads in — at any lane count."""
+    cfg = xash.XashConfig(bits=bits, max_len=32)
+    # 333 rows forces row padding to the 1024 block; 5 queries pads q to 256
+    row_sk = np.asarray(ref.xash_superkey_ref(jnp.asarray(rand_rows(333, 4, 32)), cfg))
+    q_sk = np.array(ref.xash_superkey_ref(jnp.asarray(rand_rows(5, 2, 32)), cfg))
+    q_sk[2] = 0  # zero query mixed among real ones
+    got = np.asarray(ops.filter_count(row_sk, q_sk))
+    want = np.asarray(ref.filter_count_ref(jnp.asarray(row_sk), jnp.asarray(q_sk)))
+    assert np.array_equal(got, want)
+    assert got[2] == 333  # vacuous truth: zero query matches every real row
+
+
+@pytest.mark.parametrize("bits", [128, 256, 512])
+@pytest.mark.parametrize("n,q", [(100, 7), (1030, 70)])
+def test_filter_count_agrees_with_match_sum(bits, n, q):
+    """filter_count == filter_match(...).sum(axis=0) on padded blocks at
+    every width (the fused count must equal the materialised reduction)."""
+    cfg = xash.XashConfig(bits=bits, max_len=32)
+    row_sk = np.asarray(ref.xash_superkey_ref(jnp.asarray(rand_rows(n, 5, 32)), cfg))
+    q_sk = np.asarray(ref.xash_superkey_ref(jnp.asarray(rand_rows(q, 2, 32)), cfg))
+    counts = np.asarray(ops.filter_count(row_sk, q_sk))
+    match = np.asarray(ops.filter_match(row_sk, q_sk))
+    assert counts.shape == (q,) and match.shape == (n, q)
+    assert np.array_equal(counts, match.sum(axis=0, dtype=np.int32))
+
+
+@pytest.mark.parametrize("bits", [128, 256, 512])
+def test_filter_hits_table_counts_matches_oracle(bits, monkeypatch):
+    """Device-side rule-1/2 reduction == host oracle at every width and on
+    every dispatch path (numpy / XLA / interpret-mode Pallas), on shapes
+    that force pow2 padding of rows, queries and table segments."""
+    cfg = xash.XashConfig(bits=bits, max_len=32)
+    rng = np.random.default_rng(bits)
+    n, q, n_tables = 700, 23, 19
+    row_sk = np.asarray(ref.xash_superkey_ref(jnp.asarray(rand_rows(n, 5, 32)), cfg))
+    q_sk = np.asarray(ref.xash_superkey_ref(jnp.asarray(rand_rows(q, 2, 32)), cfg))
+    elig = rng.random((n, q)) < 0.6
+    seg = np.sort(rng.integers(0, n_tables, size=n)).astype(np.int32)
+    want_hits = ops.subsume_np(row_sk, q_sk) & elig
+    want_counts = np.bincount(
+        seg, weights=want_hits.sum(axis=1), minlength=n_tables
+    ).astype(np.int32)
+    for backend in ("numpy", "xla", "pallas"):
+        monkeypatch.setenv("MATE_FILTER_BACKEND", backend)
+        hits, counts = ops.filter_hits_table_counts(
+            row_sk, q_sk, elig, seg, n_tables
+        )
+        assert np.array_equal(np.asarray(hits), want_hits), (bits, backend)
+        assert np.array_equal(counts, want_counts), (bits, backend)
+    monkeypatch.delenv("MATE_FILTER_BACKEND")
+    hits, counts = ops.filter_hits_table_counts(
+        row_sk, q_sk, elig, seg, n_tables, use_device=False
+    )
+    assert np.array_equal(np.asarray(hits), want_hits)
+    assert np.array_equal(counts, want_counts)
+
+
 @pytest.mark.parametrize("s,d,dv,window,dtype", [
     (256, 64, 64, 0, jnp.float32),
     (256, 64, 64, 64, jnp.float32),

@@ -24,7 +24,13 @@ except ModuleNotFoundError:  # property tests skip; unit tests still run
 from repro.core import encoding, xash
 
 CFG = xash.DEFAULT_CONFIG
+CFG256 = xash.XashConfig(bits=256)
 CFG512 = xash.XashConfig(bits=512)
+ALL_WIDTHS = [
+    pytest.param(CFG, id="128"),
+    pytest.param(CFG256, id="256"),
+    pytest.param(CFG512, id="512"),
+]
 
 value_strat = st.text(
     alphabet=st.characters(min_codepoint=32, max_codepoint=126),
@@ -60,13 +66,47 @@ def test_jax_matches_oracle(value):
     assert np.array_equal(got, want), value
 
 
+@pytest.mark.parametrize("cfg", ALL_WIDTHS)
 @settings(max_examples=50, deadline=None)
 @given(value_strat)
-def test_jax_matches_oracle_512(value):
-    enc = encoding.encode_values([value], CFG512.max_len)
-    got = np.asarray(xash.xash(enc, CFG512))[0]
-    want = xash.int_to_lanes(xash.xash_oracle(value, CFG512), CFG512)
-    assert np.array_equal(got, want), value
+def test_jax_matches_oracle_all_widths(cfg, value):
+    """Oracle-vs-vectorised agreement is width-independent (4/8/16 lanes)."""
+    enc = encoding.encode_values([value], cfg.max_len)
+    got = np.asarray(xash.xash(enc, cfg))[0]
+    want = xash.int_to_lanes(xash.xash_oracle(value, cfg), cfg)
+    assert np.array_equal(got, want), (cfg.bits, value)
+
+
+@pytest.mark.parametrize("cfg", ALL_WIDTHS)
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_lane_packing_roundtrip(cfg, data):
+    """int_to_lanes/lanes_to_int are exact inverses for any bits-wide int."""
+    h = data.draw(st.integers(0, (1 << cfg.bits) - 1))
+    lanes = xash.int_to_lanes(h, cfg)
+    assert lanes.shape == (cfg.lanes,) and lanes.dtype == np.uint32
+    assert xash.lanes_to_int(lanes) == h
+
+
+@pytest.mark.parametrize("cfg", ALL_WIDTHS)
+@settings(max_examples=30, deadline=None)
+@given(value_strat)
+def test_oracle_roundtrip_through_lanes(cfg, value):
+    """An oracle hash survives the uint32 lane packing at every width."""
+    h = xash.xash_oracle(value, cfg)
+    assert 0 <= h < (1 << cfg.bits)
+    assert xash.lanes_to_int(xash.int_to_lanes(h, cfg)) == h
+
+
+@pytest.mark.parametrize("cfg", ALL_WIDTHS)
+def test_config_width_derivations(cfg):
+    """Eqs. 5-6 at every width: segment split covers all bits, lanes align."""
+    assert cfg.bits == cfg.lanes * 32
+    assert cfg.char_region == encoding.ALPHABET_SIZE * cfg.c
+    assert cfg.char_region + cfg.len_segment == cfg.bits
+    # c maximal with 37*c < bits (Eq. 6)
+    assert cfg.char_region < cfg.bits <= encoding.ALPHABET_SIZE * (cfg.c + 1)
+    assert cfg.ones >= 2  # at least one char bit + the length bit
 
 
 def test_rotation_distinguishes_anagrams():
