@@ -62,21 +62,62 @@ def kernels():
         "kern/filter_match_auto_4096x256", dt_auto * 1e6,
         f"probes_per_s={probes/dt_auto:,.0f};backend_dispatch={backend}_{dispatch}"
     )
+    # fused filter+segment-count vs the composed path (match matrix + XLA
+    # segment-sum): identical probes and counts, but the fused launch's only
+    # outputs are the two counts vectors — the n×q int8 match matrix (the
+    # dominant write of the composed path) never exists, which is the
+    # structural bytes-moved metric that transfers to TPU (see
+    # docs/BENCHMARKS.md §Roofline).
+    n, q = row_sk.shape[0], q_sk.shape[0]
+    n_tables = 64
+    seg = np.sort(RNG.integers(0, n_tables, n)).astype(np.int32)
+    elig = np.ones((n, q), dtype=bool)
+    dt_fused = _time(ops.filter_table_counts, row_sk, q_sk, elig, seg, n_tables)
+    dt_comp = _time(
+        lambda: ops.filter_hits_table_counts(
+            row_sk, q_sk, elig, seg, n_tables, backend="xla"
+        )[1]
+    )
+    out_fused = 4 * n_tables + 4 * q  # counts + key-counts vectors
+    out_comp = n * q + 4 * n_tables  # int8 match matrix + counts
+    common.emit(
+        "kern/filter_table_counts_fused_4096x256", dt_fused * 1e6,
+        f"out_bytes={out_fused};matrix_bytes_avoided={n*q};"
+        f"bytes_out_vs_composed={out_fused/out_comp:.4f}"
+    )
+    common.emit(
+        "kern/filter_table_counts_composed_4096x256", dt_comp * 1e6,
+        f"out_bytes={out_comp};fused_vs_composed_wallclock={dt_comp/dt_fused:.2f}x"
+    )
 
 
 def engines():
-    print("# engine comparison: SCI vs MATE(seq) vs MATE(batched)")
+    print("# engine comparison: SCI vs MATE(seq) vs MATE(batched/fused)")
     queries = common.query_group(common.ROWS["webtable(100)"])
     idx = common.index("xash", 128)
+    # warm jit/dispatch caches so the timed runs (and the CI regression gate
+    # ratios derived from them) measure steady state, not compiles
+    for engine in ("seq", "batched", "batched_fused"):
+        common.run_discovery(idx, queries, engine=engine)
     t_sci, _ = common.run_discovery(idx, queries, row_filter=False)
     t_seq, _ = common.run_discovery(idx, queries)
     t_bat, stb = common.run_discovery(idx, queries, engine="batched")
+    t_fus, stf = common.run_discovery(idx, queries, engine="batched_fused")
     n = len(queries)
     common.emit("engine/sci", t_sci / n * 1e6, "row_filter=off")
     common.emit("engine/mate_seq", t_seq / n * 1e6, f"vs_sci={t_sci/t_seq:.2f}x")
     common.emit(
         "engine/mate_batched", t_bat / n * 1e6,
         f"vs_sci={t_sci/t_bat:.2f}x;vs_seq={t_seq/t_bat:.2f}x"
+    )
+    # fused filter+segment-count engine path: the structural claim the gate
+    # checks is matrix_bytes == 0 (counts-only readback); wall-clock vs the
+    # composed engine only transfers on TPU backends.
+    common.emit(
+        "engine/mate_batched_fused", t_fus / n * 1e6,
+        f"vs_seq={t_seq/t_fus:.2f}x;matrix_bytes={stf['matrix_bytes']};"
+        f"fused_launches={stf['fused_launches']};"
+        f"readback_bytes={stf['readback_bytes']}"
     )
 
 

@@ -79,25 +79,38 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     Engines: ``seq`` (faithful Alg. 1), ``batched`` (kernel-backed blocks,
     Pallas on TPU / XLA fallback on CPU via ops.filter_match_auto),
     ``batched_np`` (same engine, pure-numpy filter), ``many`` (all queries
-    share one filter launch — the DiscoveryEngine path).
+    share one filter launch — the DiscoveryEngine path), plus
+    ``batched_fused`` / ``many_fused`` (fused filter+segment-count kernel:
+    counts-only readback, zero match-matrix bytes).
     """
     tp = fp = checks = passed = 0
     mat_bytes = rb_bytes = 0
     precs = []
     t0 = time.perf_counter()
-    if engine == "many":
-        stats = [st for _, st in discover_many(idx, [(q, c) for q, c in queries], k=k)]
+    if engine in ("many", "many_fused"):
+        stats = [
+            st
+            for _, st in discover_many(
+                idx,
+                [(q, c) for q, c in queries],
+                k=k,
+                fused=engine == "many_fused" or None,
+            )
+        ]
     else:
         stats = []
         for q, q_cols in queries:
             if engine == "batched":
                 _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=True)
+            elif engine == "batched_fused":
+                _, st = discover_batched(idx, q, q_cols, k=k, fused=True)
             elif engine == "batched_np":
                 _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=False)
             else:
                 _, st = discovery.discover(idx, q, q_cols, k=k, row_filter=row_filter)
             stats.append(st)
     dt = time.perf_counter() - t0
+    fused_launches = 0
     for st in stats:
         tp += st.verified_tp
         fp += st.verified_fp
@@ -105,6 +118,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         passed += st.filter_passed
         mat_bytes += st.filter_matrix_bytes
         rb_bytes += st.filter_readback_bytes
+        fused_launches += st.filter_fused_launches
         precs.append(st.precision)
     return dt, {
         "tp": tp,
@@ -113,6 +127,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         "passed": passed,
         "matrix_bytes": mat_bytes,
         "readback_bytes": rb_bytes,
+        "fused_launches": fused_launches,
         "precision_mean": float(np.mean(precs)),
         "precision_std": float(np.std(precs)),
     }

@@ -3,12 +3,18 @@
 ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 prints ``name,us_per_call,derived`` CSV rows (plus section comments), then a
 roofline summary if dry-run results exist.
+
+A section that raises is reported (traceback to stderr) and the remaining
+sections still run, but the process exits NON-ZERO — CI's bench-regression
+gate (tools/check_bench.py) must be able to trust that every row it compares
+was actually produced, so a silently skipped section is a gate failure.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+import traceback
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
@@ -27,17 +33,31 @@ def main() -> None:
         bench_tables.HASHES_128 = ["murmur", "ht", "bf", "xash"]
         bench_tables.ENGINE_512 = False
 
+    failures: list[str] = []
+
+    def section(name: str, fn) -> None:
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            # drop rows the failed section emitted but never saved, so they
+            # can't leak into the NEXT section's BENCH_*.json trajectory
+            common.ROWS_CSV = []
+            print(f"# SECTION FAILED: {name}", flush=True)
+            traceback.print_exc()
+
     print("name,us_per_call,derived")
-    bench_tables.main()
-    bench_figures.main()
-    bench_kernels.main()
+    section("tables", bench_tables.main)
+    section("figures", bench_figures.main)
+    section("kernels", bench_kernels.main)
     # the width sweep exists to build 512-bit indexes — skipped entirely in
     # quick mode (run `benchmarks.bench_fp_rate --quick` directly for a
     # small-group 128/512 trend, as CI's bench job does)
     if not args.quick:
-        bench_fp_rate.main([])
+        section("fp_rate", lambda: bench_fp_rate.main([]))
 
-    # roofline summary (requires results/dryrun/*.json from the dry-run)
+    # roofline summary (requires results/dryrun/*.json from the dry-run;
+    # their absence is expected on hosts that never ran it — not a failure)
     try:
         from benchmarks import roofline
 
@@ -55,6 +75,10 @@ def main() -> None:
                 )
     except Exception as e:  # dry-run not yet executed
         print(f"# roofline summary unavailable: {e}")
+
+    if failures:
+        print(f"# FAILED sections: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -22,9 +22,15 @@ contiguous blocks fed straight to the §6.3 filter kernel:
     to the host — per surviving (un-pruned) table, just its row slice of the
     hit matrix is read back for exact verification (or one prefetch of the
     batch when the entry bound leaves most items alive anyway);
-    ``discover_many`` deliberately keeps the single-transfer design instead:
-    every request's heap starts empty, so every plan's hit block is needed
-    regardless of pruning and fused device counts would save no bytes;
+  * on the FUSED path (TPU default / ``MATE_FILTER_BACKEND=fused`` /
+    ``fused=True``) the reduction happens INSIDE the filter kernel
+    (``filter_kernel.filter_table_counts``): subsumption ∧ eligibility is
+    row-summed and scatter-accumulated over the CSR table ids in VMEM, so
+    the match matrix never exists even in HBM — counts-only readback,
+    ``DiscoveryStats.filter_matrix_bytes == 0``, and surviving tables'
+    slices are recomputed on demand for verification.  ``discover_many``
+    uses the same fused group launch, so requests pruned by the evolving
+    bounds never pay for their block of the cross-product matrix;
   * tables are visited in the same descending posting-list order as
     Algorithm 1; rule 1 (global cutoff) applies BETWEEN batches — identical
     pruning guarantee, since the bound only improves as the scan proceeds;
@@ -217,6 +223,8 @@ def _score_tables(
     t_stop: int,
     base: int,
     rule1: bool = False,
+    row_sk: np.ndarray | None = None,
+    elig: np.ndarray | None = None,
 ) -> None:
     """Verify (or rule-2-prune) tables [t_start, t_stop) of the plan's block,
     whose items live at ``block`` offsets ``base:`` covered by hits/rows.
@@ -229,6 +237,12 @@ def _score_tables(
     transfer instead of per-table dispatches; counts are exact, so the
     evolving-bound pruning decisions below are identical either way.
 
+    ``hits`` may also be None — the FUSED counts-only launch, where the
+    match matrix was never produced at all.  Surviving tables' hit slices
+    are then recomputed on demand from ``row_sk``/``elig`` (same subsumption
+    predicate → bit-identical verification inputs); pruned tables cost
+    nothing beyond their 4 count bytes.
+
     ``rule1=True`` additionally applies the paper's rule 1 inside the range
     (tables are PL-desc sorted → the first at/below the bound prunes the
     whole suffix) — the ``discover_many`` path, where the filter already ran
@@ -236,7 +250,10 @@ def _score_tables(
     """
     block, stats = plan.block, plan.stats
     ptr = block.table_ptr
-    device_hits = not isinstance(hits, np.ndarray)
+    lazy = hits is None
+    if lazy:
+        assert row_sk is not None and elig is not None
+    device_hits = (not lazy) and not isinstance(hits, np.ndarray)
     if device_hits:
         bound0 = topk.bound() if topk.full else -1
         alive = counts[: t_stop - t_start] > bound0
@@ -260,9 +277,13 @@ def _score_tables(
         if topk.full and int(counts[t - t_start]) <= topk.bound():
             stats.tables_pruned_rule2 += 1
             continue
-        sub = np.asarray(hits[lo:hi])
-        if device_hits:
+        if lazy:
+            sub = ops.subsume_np(row_sk[lo:hi], plan.q_sk) & elig[lo:hi]
             stats.filter_readback_bytes += sub.size
+        else:
+            sub = np.asarray(hits[lo:hi])
+            if device_hits:
+                stats.filter_readback_bytes += sub.size
         joinability, mapping = _calculate_j(index, plan, rows[lo:hi], sub)
         topk.offer(tid, joinability, mapping)
 
@@ -275,6 +296,7 @@ def discover_batched(
     batch_tables: int = DEFAULT_BATCH_TABLES,
     init_mode: str = "cardinality",
     use_kernel: bool = True,
+    fused: bool | None = None,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
 
@@ -283,9 +305,18 @@ def discover_batched(
     table) is read back for the rule-1/rule-2 bound checks.  Hit-matrix
     slices are transferred solely for tables that survive pruning and need
     exact verification.
+
+    ``fused`` selects the fused filter+segment-count kernel (counts-only
+    readback — the match matrix is never materialised, not even in HBM, so
+    ``stats.filter_matrix_bytes`` stays 0 and surviving tables' slices are
+    recomputed on demand).  None (default) follows the backend dispatch:
+    fused on TPU or under ``MATE_FILTER_BACKEND=fused``, composed otherwise.
     """
     plan = plan_query(index, query, q_cols, init_mode)
     stats, block = plan.stats, plan.block
+    if fused is None:
+        fused = ops.fused_filter_default()
+    fused = fused and use_kernel
     topk = _TopK(k)
     n_tables = block.n_tables
     for start in range(0, n_tables, batch_tables):
@@ -304,17 +335,34 @@ def discover_batched(
         seg = _segment_ids(block.table_ptr, start, stop)
         stats.pl_items_checked += int(rows.shape[0])
         stats.filter_checks += int(elig.sum())
-        stats.filter_matrix_bytes += int(elig.size)
-        if use_kernel and topk.full and topk.bound() > 0:
-            # bound can prune → fused device launch: hits stay on device,
-            # only the per-table counts vector is read back; surviving
-            # tables' slices transfer lazily in _score_tables.
+        if fused:
+            # fused filter+segment-count launch: the match matrix is never
+            # produced (zero filter_matrix_bytes), only the counts vector
+            # comes back; surviving tables' slices are recomputed on demand
+            # in _score_tables.  (ops falls back to the composed path above
+            # its table cap — hits non-None — and stats must follow suit.)
             hits, counts = ops.filter_hits_table_counts(
-                row_sk, plan.q_sk, elig, seg, stop - start
+                row_sk, plan.q_sk, elig, seg, stop - start, backend="fused"
+            )
+            if hits is None:
+                stats.filter_fused_launches += 1
+            else:
+                stats.filter_matrix_bytes += int(elig.size)
+        elif use_kernel and topk.full and topk.bound() > 0:
+            # bound can prune → composed device launch: hits stay on device,
+            # only the per-table counts vector is read back; surviving
+            # tables' slices transfer lazily in _score_tables.  An explicit
+            # fused=False must stick: pin the composed kernel path when the
+            # env/TPU default would otherwise re-route this call to fused.
+            stats.filter_matrix_bytes += int(elig.size)
+            hits, counts = ops.filter_hits_table_counts(
+                row_sk, plan.q_sk, elig, seg, stop - start,
+                backend="pallas" if ops.fused_filter_default() else None,
             )
         else:
             # heap not full (bound 0): nothing can be pruned, every hit
             # block is about to be verified — single-transfer path.
+            stats.filter_matrix_bytes += int(elig.size)
             hits, counts = _hits_counts_host(
                 row_sk, plan.q_sk, elig, seg, stop - start, use_kernel
             )
@@ -327,7 +375,10 @@ def discover_batched(
         else:
             stats.filter_readback_bytes += counts.nbytes
         stats.filter_passed += int(counts.sum())
-        _score_tables(index, plan, topk, hits, counts, rows, start, stop, lo)
+        _score_tables(
+            index, plan, topk, hits, counts, rows, start, stop, lo,
+            row_sk=row_sk, elig=elig,
+        )
     return topk.entries(), stats
 
 
@@ -337,6 +388,7 @@ def discover_many(
     k: int | list[int] = 10,
     init_mode: str = "cardinality",
     use_kernel: bool = True,
+    fused: bool | None = None,
 ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
     """Multi-query discovery sharing ONE filter launch.
 
@@ -344,6 +396,14 @@ def discover_many(
     subsumption launch; the match matrix is then demuxed per request and
     scored with the same rule-1/rule-2 + heap semantics, so each request's
     top-k is bit-identical to its solo ``discover``/``discover_batched`` run.
+
+    ``fused`` (None → backend dispatch: TPU / MATE_FILTER_BACKEND=fused)
+    swaps the group launch for the fused filter+segment-count kernel: the
+    (Σ rows × Σ keys) match matrix — the expensive part of the cross-product
+    trade below — is never materialised; only the group counts vector comes
+    back, and each request's surviving tables recompute their (own-keys-only)
+    hit slices on demand during scoring.  Requests pruned by the evolving
+    rule-1/2 bounds never pay for their matrix block at all.
 
     Cost note: the shared launch computes the full (Σ rows × Σ keys) cross
     product — only the block diagonal is consumed, so filter work grows
@@ -356,7 +416,11 @@ def discover_many(
     ks = [k] * len(queries) if isinstance(k, int) else list(k)
     assert len(ks) == len(queries)
     plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
+    if fused is None:
+        fused = ops.fused_filter_default()
+    fused = fused and use_kernel
     n_tables_all = 0
+    row_sk_all = hits_all = counts_all = None
     if plans:
         rows_all = np.concatenate([p.block.rows for p in plans])
         q_all = np.concatenate([p.q_sk for p in plans])
@@ -376,43 +440,65 @@ def discover_many(
             r_off += ni
             k_off += ki
             n_tables_all += ti
-        # ONE subsumption launch for the whole group.  Unlike
-        # ``discover_batched`` (whose later batches are often pruned without
-        # any matrix transfer), every request here starts with an empty heap
-        # (entry bound 0), so every plan's hit block is needed for
-        # verification regardless of pruning — the matrix comes back to the
-        # host in one transfer and the per-table rule-1/2 counts are a cheap
-        # host reduction over it; fusing them into the launch would only add
-        # device work without saving a byte of readback.
-        hits_all, counts_all = _hits_counts_host(
-            index.superkey_of_rows(rows_all), q_all, elig_all, seg_all,
-            n_tables_all, use_kernel,
-        )
+        row_sk_all = index.superkey_of_rows(rows_all)
+        if fused:
+            # ONE fused filter+segment-count launch for the whole group: the
+            # (Σ rows × Σ keys) matrix is never materialised; only the group
+            # counts vector is read back.  Surviving tables recompute their
+            # own-keys hit slices lazily in _score_tables (bit-identical to
+            # slicing the block-diagonal of the full matrix, since elig
+            # already restricts each row to its own request's keys).
+            hits_all, counts_all = ops.filter_hits_table_counts(
+                row_sk_all, q_all, elig_all, seg_all, n_tables_all,
+                backend="fused",
+            )
+        else:
+            # ONE subsumption launch for the whole group.  Unlike
+            # ``discover_batched`` (whose later batches are often pruned
+            # without any matrix transfer), every request here starts with an
+            # empty heap (entry bound 0), so most plans' hit blocks are
+            # needed for verification — the matrix comes back to the host in
+            # one transfer and the per-table rule-1/2 counts are a cheap
+            # host reduction over it.
+            hits_all, counts_all = _hits_counts_host(
+                row_sk_all, q_all, elig_all, seg_all, n_tables_all, use_kernel,
+            )
     out: list[tuple[list[TopKEntry], DiscoveryStats]] = []
     r_off = k_off = t_off = 0
     for plan, k_i in zip(plans, ks):
         n_items, n_keys = plan.block.n_items, plan.q_sk.shape[0]
         stats, block = plan.stats, plan.block
-        hits = hits_all[r_off : r_off + n_items, k_off : k_off + n_keys]
         counts = counts_all[t_off : t_off + block.n_tables]
-        r_off += n_items
-        k_off += n_keys
-        t_off += block.n_tables
         stats.pl_items_checked = n_items
         stats.filter_checks = int(plan.elig.sum())
         stats.filter_passed = int(counts.sum())
-        # the shared launch computes (and reads back) this plan's rows
-        # against the GROUP's keys — the documented cross-product trade.
-        stats.filter_matrix_bytes += n_items * hits_all.shape[1]
-        stats.filter_readback_bytes += n_items * hits_all.shape[1]
+        if hits_all is None:  # fused counts-only group launch succeeded
+            hits = None
+            stats.filter_fused_launches += 1
+            stats.filter_readback_bytes += counts.nbytes
+        else:
+            hits = hits_all[r_off : r_off + n_items, k_off : k_off + n_keys]
+            # the shared launch computes (and reads back) this plan's rows
+            # against the GROUP's keys — the documented cross-product trade.
+            # (device-resident hits — the fused→composed table-cap fallback —
+            # transfer lazily in _score_tables, which does its own readback
+            # accounting.)
+            stats.filter_matrix_bytes += n_items * hits_all.shape[1]
+            if isinstance(hits_all, np.ndarray):
+                stats.filter_readback_bytes += n_items * hits_all.shape[1]
         topk = _TopK(k_i)
         # rule 1 (PL-desc suffix pruning) applies inside the range: the
         # filter already ran batched for every table, only verification work
-        # and hit-slice readbacks remain to be skipped.
+        # and hit-slice readbacks (or fused recomputes) remain to be skipped.
         _score_tables(
             index, plan, topk, hits, counts, block.rows, 0, block.n_tables, 0,
             rule1=True,
+            row_sk=None if row_sk_all is None else row_sk_all[r_off : r_off + n_items],
+            elig=plan.elig,
         )
+        r_off += n_items
+        k_off += n_keys
+        t_off += block.n_tables
         out.append((topk.entries(), stats))
     return out
 

@@ -40,6 +40,10 @@ class DiscoveryStats:
     filter_readback_bytes: int = 0  # match bytes materialised host-side
     # (counts vectors + verification slices on the device path; the whole
     # matrix when a host/numpy dispatch produced it directly)
+    filter_fused_launches: int = 0  # fused filter+segment-count launches:
+    # the match matrix was never produced (not even in HBM), so these
+    # contribute ZERO to filter_matrix_bytes — counts-only readback plus
+    # on-demand recomputed slices for the tables that survive pruning
 
     @property
     def readback_frac(self) -> float:

@@ -22,6 +22,7 @@ blocks are balanced by construction (equal shard sizes after padding).
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _shard_map = getattr(jax, "shard_map", None)
 if _shard_map is None:
     from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _no_rep_check_kwargs() -> dict:
+    """shard_map kwargs disabling the replication-rule check (pallas_call has
+    no replication rule); the flag was renamed check_rep → check_vma."""
+    params = inspect.signature(_shard_map).parameters
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            return {name: False}
+    return {}
 
 
 def filter_counts_local(
@@ -88,21 +99,73 @@ def filter_counts_local_blocked(
     return jnp.sum(tcs, axis=0), jnp.sum(kcs, axis=0)
 
 
+def filter_counts_local_fused(
+    superkeys: jnp.ndarray,
+    row_tables: jnp.ndarray,
+    query_sks: jnp.ndarray,
+    n_tables: int,
+):
+    """Fused-kernel probe: the per-shard filter runs as ONE
+    ``filter_kernel.filter_table_counts`` launch (mode='any'), so the
+    [rows, keys] match tensor never exists per shard either — subsumption,
+    the per-row any-reduction and the table-id scatter all happen in VMEM and
+    only the two counts vectors leave the kernel.  Padding rows carry
+    ``row_tables == -1`` (the kernel's own padding convention) and padded
+    queries all-ones super keys (subsumed by nothing).  Above the kernel's
+    table cap (the one-hot scatter tile is [block_n, tb] f32 in VMEM) the
+    shard falls back to the lane-unrolled streaming impl."""
+    from repro.kernels import filter_kernel
+
+    interpret = jax.default_backend() != "tpu"
+    n, lanes = superkeys.shape
+    q = query_sks.shape[0]
+    qb = max(-(-q // 128) * 128, 128)
+    tb = max(-(-n_tables // 128) * 128, 128)
+    if tb > filter_kernel.FUSED_MAX_TABLES:
+        return filter_counts_local_blocked(
+            superkeys, row_tables, query_sks, n_tables
+        )
+    block_n = filter_kernel.fused_block_n(tb)
+    nb = max(-(-n // block_n) * block_n, block_n)
+    sk = jnp.pad(superkeys, ((0, nb - n), (0, 0)))
+    rt = jnp.pad(
+        row_tables.astype(jnp.int32), (0, nb - n), constant_values=-1
+    )
+    qs = jnp.pad(
+        query_sks, ((0, qb - q), (0, 0)),
+        constant_values=np.uint32(0xFFFFFFFF),
+    )
+    counts, key_counts = filter_kernel.filter_table_counts(
+        sk.T, qs.T, None, rt,
+        n_tables=tb, n_queries=q, block_n=block_n, block_q=qb, mode="any",
+        interpret=interpret,
+    )
+    return counts[:n_tables], key_counts[:q]
+
+
+_FILTER_IMPLS = {
+    "broadcast": filter_counts_local,
+    "blocked": filter_counts_local_blocked,
+    "fused": filter_counts_local_fused,
+}
+
+
 def make_distributed_filter(
     mesh: Mesh, n_tables: int, row_axes: tuple[str, ...], impl: str = "broadcast"
 ):
     """jit'd (superkeys, row_tables, query_sks) -> (table_counts, key_counts)
     with rows sharded over ``row_axes`` and outputs replicated (psum).
-    impl: 'broadcast' (baseline) | 'blocked' (lane-unrolled streaming)."""
-    local = (
-        filter_counts_local if impl == "broadcast" else filter_counts_local_blocked
-    )
+    impl: 'broadcast' (baseline) | 'blocked' (lane-unrolled streaming) |
+    'fused' (single Pallas filter+segment-count launch per shard)."""
+    local = _FILTER_IMPLS[impl]
+    extra = _no_rep_check_kwargs() if impl == "fused" else {}
 
     @functools.partial(
         _shard_map,
         mesh=mesh,
         in_specs=(P(row_axes), P(row_axes), P()),
         out_specs=(P(), P()),
+        **extra,
     )
     def _sharded(superkeys, row_tables, query_sks):
         tc, kc = local(superkeys, row_tables, query_sks, n_tables)

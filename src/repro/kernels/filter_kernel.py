@@ -3,10 +3,11 @@
 This is MATE's hot loop: for every (candidate row, query key) pair test
 ``(q & ~row) == 0`` over the hash lanes.  On TPU this is a pure-VPU
 streaming workload; the kernel tiles both operands into VMEM and emits either
-the match matrix or a fused per-query count (the count variant never
-materialises the n×q matrix in HBM — the reduction happens in VMEM, which is
-what makes the filter memory-roofline-optimal: 16 bytes read per row, 4 bytes
-written per query).
+the match matrix, a fused per-query count, or a fused per-TABLE segment count
+(``filter_table_counts``: subsumption ∧ eligibility row-summed and
+scatter-accumulated over the CSR table ids — the reduction happens in VMEM,
+the n×q matrix never reaches HBM, which is what makes the filter
+memory-roofline-optimal: 16 bytes read per row, 4 bytes written per table).
 
 Layout note: super keys live in HBM as ``uint32[n, lanes]``; lanes is tiny
 (4 for 128-bit hashes) and would be a terrible minor-most dim for the 8×128
@@ -24,6 +25,23 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 1024
 DEFAULT_BLOCK_Q = 256
+
+# The fused count kernel's one-hot scatter tile is [block_n, tb] f32; keep it
+# within ~4 MiB of VMEM.  At the table cap the block floor (128, the lane-dim
+# tiling minimum) sits exactly on budget: 128 · 8192 · 4 B = 4 MiB.
+FUSED_ONEHOT_BUDGET = 1 << 20  # block_n · tb elements
+FUSED_MAX_TABLES = 8192
+
+
+def fused_block_n(n_tables_padded: int, cap: int = DEFAULT_BLOCK_N) -> int:
+    """Row-block size for ``filter_table_counts``: the largest power of two
+    ≤ ``cap`` keeping the one-hot tile within FUSED_ONEHOT_BUDGET, floored at
+    128.  Power-of-two so it divides every padded row count the wrappers
+    produce (pow2 buckets below 8192, multiples of 8192 above)."""
+    b = 128
+    while b * 2 <= cap and (b * 2) * n_tables_padded <= FUSED_ONEHOT_BUDGET:
+        b *= 2
+    return b
 
 
 def _match_kernel(row_ref, query_ref, out_ref, *, lanes: int):
@@ -92,6 +110,161 @@ def filter_match(
         out_shape=jax.ShapeDtypeStruct((n, q), jnp.int8),
         interpret=interpret,
     )(row_sk_t, query_sk_t)
+
+
+def _table_counts_kernel(
+    *refs, lanes: int, mode: str, has_elig: bool, n_queries: int
+):
+    """Fused filter + segment-count: subsumption ∧ eligibility, row-summed and
+    scatter-accumulated into per-table counts via the CSR segment ids — the
+    [bn, bq] match tile lives only in VREGs/VMEM and is reduced before the
+    next grid step, so the n×q matrix never reaches HBM.
+
+    Refs (has_elig controls arity):
+      row_ref:    uint32[lanes, bn]   candidate-row super keys (transposed)
+      query_ref:  uint32[lanes, bq]   query-key super keys (transposed)
+      elig_ref:   int8[bn, bq]        eligibility (only when has_elig)
+      seg_ref:    int32[bn]           table index per row; -1 = padding row
+      counts_ref: int32[tb]           per-table counts (ONE block, all steps)
+      key_ref:    int32[bq]           per-key survivor counts
+
+    ``mode``: 'sum' counts eligible (row, key) hits per table (the engines'
+    exact rule-2 bound); 'any' counts rows matching ≥1 key (the distributed
+    filter's per-table semantics — requires a single query block, since
+    per-block ORs cannot be summed across query blocks).
+
+    The scatter is a one-hot f32 matvec: seg ids broadcast-compared against
+    the table-id iota, then per_row @ onehot on the MXU.  f32 accumulation is
+    exact here (per-step partials are bounded by bn·bq « 2^24).
+    """
+    if has_elig:
+        row_ref, query_ref, elig_ref, seg_ref, counts_ref, key_ref = refs
+    else:
+        row_ref, query_ref, seg_ref, counts_ref, key_ref = refs
+        elig_ref = None
+    j = pl.program_id(0)  # query-block index
+    i = pl.program_id(1)  # row-block index (inner grid axis → sequential)
+    acc = None
+    for lane in range(lanes):
+        r = row_ref[lane, :]  # [bn]
+        q = query_ref[lane, :]  # [bq]
+        ok = (q[None, :] & ~r[:, None]) == 0  # [bn, bq]
+        acc = ok if acc is None else (acc & ok)
+    if elig_ref is not None:
+        acc = acc & (elig_ref[...] != 0)
+    # mask padded query columns (col id ≥ n_queries): their all-ones super
+    # keys match nothing EXCEPT saturated (all-ones) row super keys, which
+    # would otherwise be overcounted when no eligibility mask zero-pads them
+    bn_, bq_ = acc.shape
+    col = j * bq_ + jax.lax.broadcasted_iota(jnp.int32, (bn_, bq_), 1)
+    acc = acc & (col < n_queries)
+    seg = seg_ref[...]  # [bn]
+    acc = acc & (seg >= 0)[:, None]  # padding rows contribute nothing
+    acc_i32 = acc.astype(jnp.int32)
+    key_partial = jnp.sum(acc_i32, axis=0)  # [bq]
+    per_row = jnp.sum(acc_i32, axis=1)  # [bn]
+    if mode == "any":
+        per_row = (per_row > 0).astype(jnp.int32)
+    bn = per_row.shape[0]
+    tb = counts_ref.shape[0]
+    # one-hot scatter: -1 (padding) matches no iota column → contributes 0.
+    onehot = seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bn, tb), 1)
+    partial = jnp.dot(
+        per_row.astype(jnp.float32)[None, :],
+        onehot.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )[0].astype(jnp.int32)  # [tb]
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_counts():
+        counts_ref[...] = partial
+
+    @pl.when(jnp.logical_or(i != 0, j != 0))
+    def _accum_counts():
+        counts_ref[...] += partial
+
+    @pl.when(i == 0)
+    def _init_keys():
+        key_ref[...] = key_partial
+
+    @pl.when(i != 0)
+    def _accum_keys():
+        key_ref[...] += key_partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_tables", "n_queries", "block_n", "block_q", "mode", "interpret"
+    ),
+)
+def filter_table_counts(
+    row_sk_t: jnp.ndarray,
+    query_sk_t: jnp.ndarray,
+    elig: jnp.ndarray | None,
+    seg_ids: jnp.ndarray,
+    *,
+    n_tables: int,
+    n_queries: int | None = None,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_q: int = DEFAULT_BLOCK_Q,
+    mode: str = "sum",
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused filter + per-table segment count from transposed super keys.
+
+    Args:
+      row_sk_t:   uint32[lanes, n] (n divisible by block_n).
+      query_sk_t: uint32[lanes, q] (q divisible by block_q).
+      elig:       int8[n, q] eligibility, or None for all-eligible.
+      seg_ids:    int32[n] table index per row (-1 for padding rows).
+      n_tables:   padded table count tb (multiple of 128).
+      n_queries:  number of REAL queries (≤ q); columns beyond it are
+                  padding and contribute nothing even to saturated
+                  (all-ones) row super keys.  Defaults to q.
+    Returns:
+      (counts int32[tb], key_counts int32[q]) — the ONLY outputs; the n×q
+      match matrix is never materialised.
+    """
+    assert mode in ("sum", "any")
+    lanes, n = row_sk_t.shape
+    _, q = query_sk_t.shape
+    n_queries = q if n_queries is None else n_queries
+    if mode == "any":
+        # per-row ANY cannot be accumulated across query blocks
+        assert q == block_q, "mode='any' needs the whole query range in one block"
+    grid = (q // block_q, n // block_n)  # row axis INNER → sequential accum
+    in_specs = [
+        pl.BlockSpec((lanes, block_n), lambda j, i: (0, i)),
+        pl.BlockSpec((lanes, block_q), lambda j, i: (0, j)),
+    ]
+    operands = [row_sk_t, query_sk_t]
+    if elig is not None:
+        in_specs.append(pl.BlockSpec((block_n, block_q), lambda j, i: (i, j)))
+        operands.append(elig)
+    in_specs.append(pl.BlockSpec((block_n,), lambda j, i: (i,)))
+    operands.append(seg_ids)
+    counts, key_counts = pl.pallas_call(
+        functools.partial(
+            _table_counts_kernel,
+            lanes=lanes,
+            mode=mode,
+            has_elig=elig is not None,
+            n_queries=n_queries,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((n_tables,), lambda j, i: (0,)),
+            pl.BlockSpec((block_q,), lambda j, i: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tables,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return counts, key_counts
 
 
 @functools.partial(

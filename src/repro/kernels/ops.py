@@ -19,7 +19,10 @@ from repro.core.xash import DEFAULT_CONFIG, XashConfig
 from repro.kernels import filter_kernel, xash_kernel
 
 # Force the row-filter dispatch path (CI matrix / debugging):
-#   MATE_FILTER_BACKEND=pallas  -> Pallas filter_kernel (interpret mode off-TPU)
+#   MATE_FILTER_BACKEND=fused   -> fused filter+segment-count Pallas kernel
+#                                  (counts-only readback; interpret off-TPU)
+#   MATE_FILTER_BACKEND=pallas  -> composed Pallas filter_kernel + XLA
+#                                  segment-sum (interpret mode off-TPU)
 #   MATE_FILTER_BACKEND=xla     -> vectorised XLA subsumption
 #   MATE_FILTER_BACKEND=numpy   -> host-side numpy oracle
 _BACKEND_ENV = "MATE_FILTER_BACKEND"
@@ -30,11 +33,18 @@ def _on_cpu() -> bool:
 
 
 def _filter_backend() -> str:
-    """'pallas' | 'xla' | 'numpy' | 'auto' (size-based numpy/xla split)."""
+    """'fused' | 'pallas' | 'xla' | 'numpy' | 'auto' (size-based split)."""
     forced = os.environ.get(_BACKEND_ENV, "").strip().lower()
-    if forced in ("pallas", "xla", "numpy"):
+    if forced in ("fused", "pallas", "xla", "numpy"):
         return forced
-    return "pallas" if jax.default_backend() == "tpu" else "auto"
+    return "fused" if jax.default_backend() == "tpu" else "auto"
+
+
+def fused_filter_default() -> bool:
+    """True when the engines should default to the fused counts-only launch
+    (forced via MATE_FILTER_BACKEND=fused, or running on a real TPU where the
+    fused kernel is the roofline path)."""
+    return _filter_backend() == "fused"
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
@@ -196,6 +206,8 @@ def filter_match_auto(
     if n == 0 or q == 0:
         return np.zeros((n, q), dtype=bool)
     backend = _filter_backend()
+    if backend == "fused":
+        backend = "pallas"  # fused has no matrix output; same kernel family
     if backend == "auto":
         backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"
     if backend == "numpy":
@@ -238,6 +250,76 @@ def _combine_counts(match, elig, seg, *, num_segments: int):
     return hits, _per_table_counts(hits, seg, num_segments)
 
 
+# above this table count the fused one-hot tile would blow VMEM even at the
+# minimum row block, and the composed path wins anyway (readback is already
+# counts-dominated at that scale) — see filter_kernel.fused_block_n
+_FUSED_MAX_TABLES = filter_kernel.FUSED_MAX_TABLES
+
+
+def filter_table_counts(
+    row_sk: np.ndarray | jnp.ndarray,
+    query_sk: np.ndarray | jnp.ndarray,
+    elig: np.ndarray | None,
+    seg_ids: np.ndarray,
+    n_tables: int,
+    *,
+    mode: str = "sum",
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Fused filter+segment-count launch: per-table eligible-hit counts with
+    COUNTS-ONLY readback — the rows × queries match matrix is never
+    materialised, not even in HBM (paper §6.3 at its true roofline:
+    ~16 bytes read per row, 4 bytes written per table).
+
+    Args:
+      row_sk:   uint32[n, lanes] candidate-row super keys.
+      query_sk: uint32[q, lanes] query-key super keys.
+      elig:     bool[n, q] eligibility per (item, key), or None (all eligible).
+      seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
+      n_tables: number of tables covered by this block.
+      mode:     'sum' (eligible hits per table) | 'any' (rows with ≥1 hit).
+    Returns:
+      int32[n_tables] counts on the host — the only transfer.
+    """
+    n, q = row_sk.shape[0], query_sk.shape[0]
+    if n == 0 or q == 0 or n_tables == 0:
+        return np.zeros(n_tables, dtype=np.int32)
+    assert n_tables <= _FUSED_MAX_TABLES, n_tables
+    interpret = _on_cpu() if interpret is None else interpret
+    nb = _bucket(n, _FALLBACK_MIN_N)
+    qb = _pow2_bucket(q, _FALLBACK_MIN_Q)
+    tb = max(-(-n_tables // 128) * 128, 128)
+    # power-of-two block ≤ nb: divides both pow2 buckets and 8192-multiples,
+    # so the grid covers every padded row exactly
+    block_n = min(nb, filter_kernel.fused_block_n(tb))
+    block_q = qb if mode == "any" else min(qb, filter_kernel.DEFAULT_BLOCK_Q)
+    rows_p = np.zeros((nb, row_sk.shape[1]), dtype=np.uint32)
+    rows_p[:n] = row_sk
+    # padded queries get all-ones super keys (subsumed by nothing)
+    qry_p = np.full((qb, query_sk.shape[1]), 0xFFFFFFFF, dtype=np.uint32)
+    qry_p[:q] = query_sk
+    seg_p = np.full(nb, -1, dtype=np.int32)  # padding rows scatter nowhere
+    seg_p[:n] = seg_ids
+    elig_p = None
+    if elig is not None:
+        elig_p = np.zeros((nb, qb), dtype=np.int8)
+        elig_p[:n, :q] = elig
+        elig_p = jnp.asarray(elig_p)
+    counts, _key_counts = filter_kernel.filter_table_counts(
+        jnp.asarray(rows_p).T,
+        jnp.asarray(qry_p).T,
+        elig_p,
+        jnp.asarray(seg_p),
+        n_tables=tb,
+        n_queries=q,
+        block_n=block_n,
+        block_q=block_q,
+        mode=mode,
+        interpret=interpret,
+    )
+    return np.asarray(counts)[:n_tables]
+
+
 def filter_hits_table_counts(
     row_sk: np.ndarray | jnp.ndarray,
     query_sk: np.ndarray | jnp.ndarray,
@@ -246,7 +328,8 @@ def filter_hits_table_counts(
     n_tables: int,
     *,
     use_device: bool = True,
-) -> tuple[np.ndarray | jnp.ndarray, np.ndarray]:
+    backend: str | None = None,
+) -> tuple[np.ndarray | jnp.ndarray | None, np.ndarray]:
     """Device-side inputs for the §6.2 bound checks: eligible filter hits plus
     per-table hit counts, WITHOUT transferring the match matrix to the host.
 
@@ -257,16 +340,26 @@ def filter_hits_table_counts(
       seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
       n_tables: number of tables covered by this block.
       use_device: False forces the host numpy path (engines' ``use_kernel``).
+      backend:  override the MATE_FILTER_BACKEND dispatch for this call
+                ('fused' | 'pallas' | 'xla' | 'numpy').
     Returns:
-      (hits, counts) — ``hits`` bool[n, q] stays device-resident on the
-      XLA/Pallas paths (slice it per surviving table; only those slices are
-      ever read back); ``counts`` int32[n_tables] is the one per-batch host
-      readback the rule-1/rule-2 bounds consume.
+      (hits, counts) — ``counts`` int32[n_tables] is the one per-batch host
+      readback the rule-1/rule-2 bounds consume.  On the composed XLA/Pallas
+      paths ``hits`` bool[n, q] stays device-resident (slice it per surviving
+      table; only those slices are ever read back).  On the FUSED path
+      ``hits`` is None: the match matrix was never produced at all — callers
+      recompute the (few) surviving tables' slices on demand.
     """
     n, q = row_sk.shape[0], query_sk.shape[0]
     if n == 0 or q == 0 or n_tables == 0:
         return np.zeros((n, q), dtype=bool), np.zeros(n_tables, dtype=np.int32)
-    backend = _filter_backend() if use_device else "numpy"
+    if backend is None:
+        backend = _filter_backend() if use_device else "numpy"
+    if backend == "fused" and n_tables > _FUSED_MAX_TABLES:
+        backend = "pallas"  # scatter tile would blow VMEM; composed oracle
+    if backend == "fused":
+        counts = filter_table_counts(row_sk, query_sk, elig, seg_ids, n_tables)
+        return None, counts
     if backend == "auto":
         backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"
     if backend == "numpy":

@@ -83,12 +83,17 @@ def main(argv=None):
             f"precision={st.precision:.3f} engines_bit_identical={match}"
         )
     prec = agg["tp"] / max(agg["tp"] + agg["fp"], 1)
+    if agg["mat_bytes"]:
+        readback = (
+            f"match_readback={agg['rb_bytes']}/{agg['mat_bytes']}B "
+            f"({agg['rb_bytes'] / agg['mat_bytes']:.1%} of full matrix)"
+        )
+    else:  # fused counts-only path: no match matrix was ever produced
+        readback = f"match_readback={agg['rb_bytes']}B (fused, matrix_bytes=0)"
     print(
         f"[mate] total: precision={prec:.3f} filter_checks={agg['checks']} "
         f"seq={agg['t_seq']:.2f}s batched={agg['t_batched']:.2f}s "
-        f"speedup={agg['t_seq']/max(agg['t_batched'],1e-9):.1f}x "
-        f"match_readback={agg['rb_bytes']}/{agg['mat_bytes']}B "
-        f"({agg['rb_bytes']/max(agg['mat_bytes'],1):.1%} of full matrix)"
+        f"speedup={agg['t_seq']/max(agg['t_batched'],1e-9):.1f}x " + readback
     )
 
     # multi-query serving path: requests share filter launches in slot

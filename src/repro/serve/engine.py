@@ -59,12 +59,24 @@ class DiscoveryEngine:
     serves whatever hash width its index was built at (``bits``): group
     launches, device-side rule-1/2 counts and verification slices are all
     ``lanes``-wide, so a 512-bit lake and a 128-bit lake run the same code.
+
+    ``fused`` selects the fused filter+segment-count kernel for the group
+    launches (counts-only readback, zero match-matrix bytes — see
+    ``core.batched.discover_many``); None follows the backend dispatch
+    (fused on TPU / ``MATE_FILTER_BACKEND=fused``).
     """
 
-    def __init__(self, index: MateIndex, batch: int = 8, use_kernel: bool = True):
+    def __init__(
+        self,
+        index: MateIndex,
+        batch: int = 8,
+        use_kernel: bool = True,
+        fused: bool | None = None,
+    ):
         self.index = index
         self.batch = batch
         self.use_kernel = use_kernel
+        self.fused = fused
         self.queue: list[DiscoveryRequest] = []
 
     @property
@@ -87,6 +99,7 @@ class DiscoveryEngine:
                 [(r.query, r.q_cols) for r in group],
                 k=[r.k for r in group],
                 use_kernel=self.use_kernel,
+                fused=self.fused,
             )
             for req, (entries, stats) in zip(group, out):
                 req.results, req.stats = entries, stats

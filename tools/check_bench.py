@@ -1,0 +1,143 @@
+"""CI bench-regression gate: compare the latest benchmark run against the
+committed baseline and exit non-zero on regression.
+
+Usage (what .github/workflows/ci.yml runs after the bench step):
+
+    PYTHONPATH=src python tools/check_bench.py \
+        [--baseline benchmarks/baselines/BASELINE_ci.json] \
+        [--results-dir benchmarks/results]
+
+The baseline (``benchmarks/baselines/BASELINE_ci.json``, recorded on the
+pinned ubuntu CI runner) names metrics as ``<section>:<row>:<key>`` —
+``section`` selects ``BENCH_<section>.json``, ``row`` the emitted row name,
+``key`` one ``key=value`` entry of its derived field.  Only RATIOS and exact
+structural counts are gated (engine speedups, fp rates, fused matrix bytes):
+absolute wall-clock µs are machine noise, ratios against a same-process
+reference are not.
+
+Per metric:
+  * ``"exact": true``          — current must equal ``value`` exactly
+                                 (fn counts, ordering flags, matrix bytes);
+  * ``"direction": "higher"``  — fail if current < value · (1 − tolerance)
+                                 (speedup ratios: lower = regression);
+  * ``"direction": "lower"``   — fail if current > value · (1 + tolerance)
+                                 (fp rates: higher = regression).
+
+``tolerance`` defaults to ``default_tolerance`` (0.20 — the >20% regression
+bar from ROADMAP "Trajectory dashboards") and can be overridden per metric.
+A metric whose row/key is missing from the latest run FAILS the gate: a
+benchmark that silently stopped emitting is itself a regression
+(benchmarks/run.py exits non-zero on section errors for the same reason).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "baselines", "BASELINE_ci.json")
+DEFAULT_RESULTS = os.path.join(REPO, "benchmarks", "results")
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """'a=1.5x;b=True;c=12' -> {'a': 1.5, 'b': 1.0, 'c': 12.0} (non-numeric
+    entries are skipped)."""
+    out: dict[str, float] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, _, raw = part.partition("=")
+        raw = raw.strip().rstrip("x").replace(",", "")
+        if raw in ("True", "False"):
+            out[key.strip()] = float(raw == "True")
+            continue
+        try:
+            out[key.strip()] = float(raw)
+        except ValueError:
+            continue
+    return out
+
+
+def latest_rows(results_dir: str, section: str) -> dict[str, dict[str, float]]:
+    """Row name -> parsed derived dict for the LAST run in BENCH_<section>.json."""
+    path = os.path.join(results_dir, f"BENCH_{section}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        history = json.load(f)
+    if not history:
+        return {}
+    return {
+        row["name"]: parse_derived(row.get("derived", ""))
+        for row in history[-1]["rows"]
+    }
+
+
+def check(baseline: dict, results_dir: str) -> list[str]:
+    """Returns a list of failure descriptions (empty = gate passes)."""
+    failures: list[str] = []
+    default_tol = float(baseline.get("default_tolerance", 0.20))
+    cache: dict[str, dict[str, dict[str, float]]] = {}
+    for name, spec in baseline["metrics"].items():
+        section, row, key = name.split(":", 2)
+        if section not in cache:
+            cache[section] = latest_rows(results_dir, section)
+        rows = cache[section]
+        cur = rows.get(row, {}).get(key)
+        base = float(spec["value"])
+        if cur is None:
+            failures.append(f"{name}: missing from latest BENCH_{section}.json run")
+            continue
+        if spec.get("exact"):
+            if cur != base:
+                failures.append(f"{name}: expected exactly {base}, got {cur}")
+            else:
+                print(f"ok    {name}: {cur} (exact)")
+            continue
+        tol = float(spec.get("tolerance", default_tol))
+        direction = spec["direction"]
+        if direction == "higher":
+            floor = base * (1.0 - tol)
+            if cur < floor:
+                failures.append(
+                    f"{name}: {cur:.4g} < {floor:.4g} "
+                    f"(baseline {base:.4g} − {tol:.0%})"
+                )
+            else:
+                print(f"ok    {name}: {cur:.4g} (≥ {floor:.4g})")
+        elif direction == "lower":
+            ceil = base * (1.0 + tol)
+            if cur > ceil:
+                failures.append(
+                    f"{name}: {cur:.4g} > {ceil:.4g} "
+                    f"(baseline {base:.4g} + {tol:.0%})"
+                )
+            else:
+                print(f"ok    {name}: {cur:.4g} (≤ {ceil:.4g})")
+        else:
+            failures.append(f"{name}: bad direction {direction!r} in baseline")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--results-dir", default=DEFAULT_RESULTS)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(baseline, args.results_dir)
+    if failures:
+        print(f"\nBENCH GATE FAILED ({len(failures)} metric(s)):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  FAIL  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nbench gate passed: {len(baseline['metrics'])} metric(s) ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
