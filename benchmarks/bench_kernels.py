@@ -83,11 +83,13 @@ def kernels():
     common.emit(
         "kern/filter_table_counts_fused_4096x256", dt_fused * 1e6,
         f"out_bytes={out_fused};matrix_bytes_avoided={n*q};"
-        f"bytes_out_vs_composed={out_fused/out_comp:.4f}"
+        f"bytes_out_vs_composed={out_fused/out_comp:.4f}",
+        backend="fused",  # this row pins the fused kernel regardless of env
     )
     common.emit(
         "kern/filter_table_counts_composed_4096x256", dt_comp * 1e6,
-        f"out_bytes={out_comp};fused_vs_composed_wallclock={dt_comp/dt_fused:.2f}x"
+        f"out_bytes={out_comp};fused_vs_composed_wallclock={dt_comp/dt_fused:.2f}x",
+        backend="xla",  # composed reference is pinned to the XLA path
     )
 
 
@@ -117,7 +119,8 @@ def engines():
         "engine/mate_batched_fused", t_fus / n * 1e6,
         f"vs_seq={t_seq/t_fus:.2f}x;matrix_bytes={stf['matrix_bytes']};"
         f"fused_launches={stf['fused_launches']};"
-        f"readback_bytes={stf['readback_bytes']}"
+        f"readback_bytes={stf['readback_bytes']}",
+        backend="fused",  # run_discovery pins backend='fused' for this row
     )
 
 

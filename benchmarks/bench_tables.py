@@ -79,7 +79,10 @@ def table_engines():
                 )
             common.emit(
                 f"engines/{gname}/{engine}", dt / len(queries) * 1e6,
-                f"precision={st['precision_mean']:.3f};passed={st['passed']}{rb}"
+                f"precision={st['precision_mean']:.3f};passed={st['passed']}{rb}",
+                # batched_np pins the numpy oracle in code; the others follow
+                # the process-level registry resolution
+                backend="numpy" if engine == "batched_np" else None,
             )
         common.emit(
             f"engines/{gname}/speedups", 0.0,

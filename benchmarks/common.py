@@ -17,8 +17,19 @@ from repro.core import discovery, xash
 from repro.core.batched import discover_batched, discover_many, filter_outcomes
 from repro.core.index import MateIndex
 from repro.data import synthetic
+from repro.kernels import registry
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def resolved_backend() -> str:
+    """The registry-resolved filter backend this bench process runs under.
+
+    Stamped into every trajectory row so ``tools/check_bench.py`` can refuse
+    to compare runs recorded under different backends (a baseline recorded
+    on the fused path must not be "regressed" by a composed-path run).
+    """
+    return registry.resolve_backend().name
 
 SEED = 3
 N_TABLES = 500
@@ -77,11 +88,12 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     """Returns (seconds_total, aggregate stats).
 
     Engines: ``seq`` (faithful Alg. 1), ``batched`` (kernel-backed blocks,
-    Pallas on TPU / XLA fallback on CPU via ops.filter_match_auto),
-    ``batched_np`` (same engine, pure-numpy filter), ``many`` (all queries
+    registry-resolved backend: Pallas on TPU / XLA fallback on CPU),
+    ``batched_np`` (same engine, backend='numpy'), ``many`` (all queries
     share one filter launch — the DiscoveryEngine path), plus
-    ``batched_fused`` / ``many_fused`` (fused filter+segment-count kernel:
-    counts-only readback, zero match-matrix bytes).
+    ``batched_fused`` / ``many_fused`` (backend='fused': the fused
+    filter+segment-count kernel — counts-only readback, zero match-matrix
+    bytes).
     """
     tp = fp = checks = passed = 0
     mat_bytes = rb_bytes = 0
@@ -94,18 +106,18 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
                 idx,
                 [(q, c) for q, c in queries],
                 k=k,
-                fused=engine == "many_fused" or None,
+                backend="fused" if engine == "many_fused" else None,
             )
         ]
     else:
         stats = []
         for q, q_cols in queries:
             if engine == "batched":
-                _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=True)
+                _, st = discover_batched(idx, q, q_cols, k=k)
             elif engine == "batched_fused":
-                _, st = discover_batched(idx, q, q_cols, k=k, fused=True)
+                _, st = discover_batched(idx, q, q_cols, k=k, backend="fused")
             elif engine == "batched_np":
-                _, st = discover_batched(idx, q, q_cols, k=k, use_kernel=False)
+                _, st = discover_batched(idx, q, q_cols, k=k, backend="numpy")
             else:
                 _, st = discovery.discover(idx, q, q_cols, k=k, row_filter=row_filter)
             stats.append(st)
@@ -136,17 +148,24 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
 ROWS_CSV = []
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS_CSV.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str, backend: str | None = None):
+    """Record one bench row.  ``backend`` overrides the row's backend stamp
+    for rows that PIN a backend in code (``engine='batched_fused'`` and
+    friends) rather than following the process-level registry resolution —
+    the stamp must describe what the row actually ran."""
+    ROWS_CSV.append((name, us_per_call, derived, backend))
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
 def save_trajectory(section: str) -> str:
     """Append this run's rows to ``benchmarks/results/BENCH_<section>.json``.
 
-    Each file is a JSON list of run records ({"ts", "rows"}) so successive
-    runs accumulate a perf trajectory; rows emitted since the last save are
-    consumed.  Returns the file path.
+    Each file is a JSON list of run records ({"ts", "backend", "rows"}) so
+    successive runs accumulate a perf trajectory; rows emitted since the
+    last save are consumed.  Every row (and the record itself) carries the
+    registry-resolved filter backend, so downstream comparisons
+    (``tools/check_bench.py``, ``tools/plot_bench.py``) can tell apart runs
+    recorded under different dispatch paths.  Returns the file path.
     """
     global ROWS_CSV
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -158,10 +177,13 @@ def save_trajectory(section: str) -> str:
                 history = json.load(f)
         except (json.JSONDecodeError, OSError):
             history = []
+    backend = resolved_backend()
     history.append({
         "ts": time.time(),
+        "backend": backend,
         "rows": [
-            {"name": n, "us_per_call": us, "derived": d} for n, us, d in ROWS_CSV
+            {"name": n, "us_per_call": us, "derived": d, "backend": bk or backend}
+            for n, us, d, bk in ROWS_CSV
         ],
     })
     with open(path, "w") as f:

@@ -46,6 +46,9 @@ def main() -> None:
             print(f"# SECTION FAILED: {name}", flush=True)
             traceback.print_exc()
 
+    # every row this process emits is stamped with ONE resolved backend —
+    # announce it up front so a pasted CSV is self-describing too
+    print(f"# filter_backend={common.resolved_backend()} (registry-resolved)")
     print("name,us_per_call,derived")
     section("tables", bench_tables.main)
     section("figures", bench_figures.main)

@@ -1,10 +1,13 @@
 """Distributed MATE: the paper's filter as a mesh-sharded workload.
 
-Shards a corpus' super keys over a device mesh, replicates the query keys,
-and runs the subsumption filter + per-table candidate counting with psum —
-the layout that scales the online phase to pod-sized corpora (EXPERIMENTS.md
-§Roofline rows 'mate-filter').  On CPU this runs on a 1x1 mesh; the same
-code lowers for 16x16 / 2x16x16 in the dry-run.
+Opens a ``MateSession`` on a synthetic lake, shards its super keys over a
+device mesh, replicates the query keys, and runs the subsumption filter +
+per-table candidate counting with psum — the layout that scales the online
+phase to pod-sized corpora (EXPERIMENTS.md §Roofline rows 'mate-filter').
+The per-shard filter impl resolves from the SAME backend registry the
+session uses (a 'fused' backend runs the fused per-shard Pallas launch).
+On CPU this runs on a 1x1 mesh; the same code lowers for 16x16 / 2x16x16
+in the dry-run.
 
     PYTHONPATH=src python examples/distributed_discovery.py
 """
@@ -17,25 +20,25 @@ sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 import numpy as np
 
 from repro.core import discovery, distributed
-from repro.core.batched import discover_batched
-from repro.core.index import MateIndex
+from repro.core.session import DiscoveryConfig, MateSession
 from repro.data import synthetic
 from repro.launch import mesh as meshlib
 
 
 def main():
     corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=600, seed=11))
-    index = MateIndex(corpus, use_corpus_char_freq=True)
+    session = MateSession.build(corpus, DiscoveryConfig(k=10))
     queries = synthetic.make_mixed_queries(corpus, 3, 30, 2, seed=12)
-    print(f"lake: {corpus.total_rows} rows / {len(corpus.tables)} tables")
+    print(f"lake: {corpus.total_rows} rows / {len(corpus.tables)} tables; {session}")
 
     # host engine for reference
     q, q_cols = queries[0]
-    topk, stats = discover_batched(index, q, q_cols, k=10)
+    topk, stats = session.discover(q, q_cols)
     print(f"batched engine top-3: {[(e.table_id, e.joinability) for e in topk[:3]]} "
           f"(precision {stats.precision:.3f})")
 
-    # mesh-sharded filter
+    # mesh-sharded filter, impl resolved from the session's backend
+    index = session.index
     mesh = meshlib.make_mesh((1, 1), ("data", "model"))
     row_tables = np.asarray(
         corpus.table_of_row(np.arange(corpus.total_rows)), dtype=np.int32
@@ -45,13 +48,16 @@ def main():
     )
     _keys, sk_of_key = discovery.build_query_superkeys(index, q, q_cols)
     qsk = np.stack(list(sk_of_key.values()))
-    filt = distributed.make_distributed_filter(mesh, len(corpus.tables), ("data",))
+    filt = distributed.make_distributed_filter(
+        mesh, len(corpus.tables), ("data",), backend=session.backend
+    )
     t0 = time.time()
     table_counts, key_counts = filt(sk, rt, qsk)
     table_counts.block_until_ready()
     tc = np.asarray(table_counts)
-    print(f"distributed filter: {tc.sum()} candidate rows in "
-          f"{(tc > 0).sum()} tables ({time.time()-t0:.3f}s on mesh "
+    print(f"distributed filter (impl="
+          f"{distributed.shard_impl_for(session.backend)}): {tc.sum()} candidate "
+          f"rows in {(tc > 0).sum()} tables ({time.time()-t0:.3f}s on mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))})")
     top_tables = np.argsort(-tc)[:5]
     print(f"most candidate-dense tables: {[(int(t), int(tc[t])) for t in top_tables]}")

@@ -27,7 +27,7 @@ import numpy as np
 from repro import configs
 from repro.ckpt.manager import CheckpointManager
 from repro.core.corpus import Corpus, Table
-from repro.core.index import MateIndex
+from repro.core.session import DiscoveryConfig, MateSession
 from repro.data import synthetic
 from repro.data.enrichment import enrich, tokenize_records
 from repro.models import params as params_lib, transformer
@@ -51,12 +51,13 @@ def main():
             for i in range(64)]
     corpus.tables.append(Table(len(corpus.tables), feat))
     corpus = Corpus(corpus.tables)
-    index = MateIndex(corpus, use_corpus_char_freq=True)
-    print(f"[1] lake indexed: {corpus.total_rows} rows")
+    session = MateSession.build(corpus, DiscoveryConfig(k=5))
+    print(f"[1] lake indexed: {corpus.total_rows} rows "
+          f"(backend={session.backend.name})")
 
     # ---- 2. enrichment via MATE ----
     base = Table(-1, base_cells)
-    enriched, prov = enrich(index, base, key_cols=[0, 1], k=5)
+    enriched, prov = enrich(session, base, key_cols=[0, 1], k=5)
     print(f"[2] enriched {base.n_cols} -> {enriched.n_cols} cols; provenance:")
     for p in prov:
         print(f"    table {p['table_id']}: j={p['joinability']} "

@@ -1,7 +1,8 @@
 """Quickstart: MATE in five minutes.
 
-Builds a small synthetic data lake, indexes it with XASH super keys, runs
-top-k multi-attribute join discovery, and shows the filtering statistics the
+Builds a small synthetic data lake, opens a ``MateSession`` on it (one
+frozen ``DiscoveryConfig``, one resolved filter backend), runs top-k
+multi-attribute join discovery, and shows the filtering statistics the
 paper is about.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -11,8 +12,7 @@ import sys
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
-from repro.core import discovery
-from repro.core.index import MateIndex
+from repro.core.session import DiscoveryConfig, MateSession
 from repro.data import synthetic
 
 
@@ -22,19 +22,24 @@ def main():
     print(f"lake: {len(corpus.tables)} tables, {corpus.total_rows} rows, "
           f"{len(corpus.unique_values)} unique values")
 
-    # 2. offline phase: inverted index + XASH super keys
-    index = MateIndex(corpus, use_corpus_char_freq=True)
-    print(f"indexed with {index.cfg.bits}-bit XASH "
-          f"(c={index.cfg.c}, ones={index.cfg.ones})")
-
-    # 3. a query table with a 2-column composite key, with known joins
-    query, q_cols, expected, corpus2 = synthetic.make_query_with_ground_truth(
+    # 2. a query table with a 2-column composite key, with known joins
+    query, q_cols, expected, corpus = synthetic.make_query_with_ground_truth(
         corpus, n_rows=20, key_width=2, n_joinable_tables=6
     )
-    index = MateIndex(corpus2, use_corpus_char_freq=True)  # rebuilt post-injection
 
-    # 4. online phase: top-k n-ary join discovery (Algorithm 1)
-    topk, stats = discovery.discover(index, query, q_cols, k=5)
+    # 3. offline phase: ONE config object, ONE session — the session builds
+    #    the inverted index + XASH super keys and resolves the filter
+    #    backend (config > MATE_FILTER_BACKEND env var > platform default)
+    config = DiscoveryConfig(bits=128, k=5)
+    session = MateSession.build(corpus, config)
+    print(f"indexed with {session.bits}-bit XASH "
+          f"(c={session.index.cfg.c}, ones={session.index.cfg.ones}); "
+          f"filter backend: {session.backend.name} "
+          f"[resolved from {session.backend.source}]")
+
+    # 4. online phase: top-k n-ary join discovery (batched Algorithm 1 —
+    #    bit-identical to the faithful scalar engine in core/discovery.py)
+    topk, stats = session.discover(query, q_cols)
     print("\ntop-5 joinable tables (table_id, joinability, column mapping):")
     for e in topk:
         print(f"  table {e.table_id:4d}  j={e.joinability:3d}  mapping={e.mapping}")
@@ -45,6 +50,7 @@ def main():
         f"{stats.filter_passed} passed, precision={stats.precision:.3f}, "
         f"rule1-pruned={stats.tables_pruned_rule1} tables"
     )
+    print(f"session: {session}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,18 @@
-"""Batched serving example: slot-batched prefill+decode with the engine.
+"""Batched serving example: LLM decode ticks interleaved with MATE discovery.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-1.3b]
 
-Runs the reduced config of any assigned architecture (attention KV caches,
-MLA latent caches and SSM states all flow through the same cache pytree).
+Two request classes share one host loop, the shape the async-serve roadmap
+item targets:
+
+  * token generation — slot-batched prefill+decode (``ServeEngine``) for the
+    reduced config of any assigned architecture (attention KV caches, MLA
+    latent caches and SSM states all flow through the same cache pytree);
+  * join discovery — a ``DiscoveryEngine`` over a ``MateSession``: requests
+    queue with an arrival-window policy (group size ``--disc-batch``,
+    deadline ``--flush-after``) and the loop calls ``pump()`` between decode
+    ticks, so a discovery group launches the moment its window fills or its
+    deadline expires — without stalling decode while the window is open.
 """
 
 import argparse
@@ -16,9 +25,11 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core.session import DiscoveryConfig, MateSession
+from repro.data import synthetic
 from repro.data.pipeline import stub_inputs
 from repro.models import params as params_lib, transformer
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import DiscoveryEngine, Request, ServeEngine
 
 
 def main():
@@ -28,8 +39,24 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--disc-requests", type=int, default=6)
+    ap.add_argument("--disc-batch", type=int, default=4)
+    ap.add_argument("--flush-after", type=float, default=0.05)
     args = ap.parse_args()
 
+    # ---- discovery side: one session over a synthetic lake ----
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=120, seed=9))
+    session = MateSession.build(
+        corpus,
+        DiscoveryConfig(k=5, window=args.disc_batch, flush_after=args.flush_after),
+    )
+    disc = DiscoveryEngine(session=session)
+    disc_queries = synthetic.make_mixed_queries(
+        corpus, args.disc_requests, 12, 2, seed=10
+    )
+    print(f"lake: {corpus.total_rows} rows; {session}")
+
+    # ---- LLM side: slot-batched decode ----
     cfg = configs.reduce_config(configs.get_config(args.arch))
     params = params_lib.materialize(
         transformer.model_specs(cfg), jax.random.PRNGKey(0)
@@ -44,14 +71,36 @@ def main():
                 max_new=args.max_new)
         for _ in range(args.requests)
     ]
+
+    # interleave: submit a discovery request every other decode tick and
+    # pump the discovery engine after every tick — groups launch when the
+    # window fills or the oldest request's deadline expires, decode never
+    # waits on an open window.
+    disc_iter = iter(disc_queries)
+    disc_served = 0
+
+    def tick(step: int) -> None:
+        nonlocal disc_served
+        if step % 2 == 0:
+            nxt = next(disc_iter, None)
+            if nxt is not None:
+                disc.submit(nxt[0], nxt[1])
+        disc_served += len(disc.pump())
+
+    engine.on_tick = tick  # ServeEngine calls this between decode steps
     t0 = time.time()
     done = engine.generate(reqs)
+    disc_served += len(disc.flush())  # drain any open window at shutdown
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
     print(f"{cfg.name}: {len(done)} requests, {n_tok} new tokens, "
           f"{n_tok/dt:.1f} tok/s (CPU, reduced config)")
     for i, r in enumerate(done[:4]):
         print(f"  req{i}: prompt={r.prompt[:5]}... -> {r.out}")
+    print(f"discovery: {disc_served}/{len(disc_queries)} requests served "
+          f"between decode ticks (window={disc.batch}, "
+          f"flush_after={disc.flush_after}s, backend={session.backend.name}); "
+          f"precision={session.stats.precision:.3f}")
 
 
 if __name__ == "__main__":

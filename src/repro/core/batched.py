@@ -22,8 +22,9 @@ contiguous blocks fed straight to the §6.3 filter kernel:
     to the host — per surviving (un-pruned) table, just its row slice of the
     hit matrix is read back for exact verification (or one prefetch of the
     batch when the entry bound leaves most items alive anyway);
-  * on the FUSED path (TPU default / ``MATE_FILTER_BACKEND=fused`` /
-    ``fused=True``) the reduction happens INSIDE the filter kernel
+  * on the FUSED path (``backend='fused'`` — the TPU platform default, also
+    selectable via ``MATE_FILTER_BACKEND=fused``; see ``kernels.registry``
+    for the one precedence rule) the reduction happens INSIDE the filter kernel
     (``filter_kernel.filter_table_counts``): subsumption ∧ eligibility is
     row-summed and scatter-accumulated over the CSR table ids in VMEM, so
     the match matrix never exists even in HBM — counts-only readback,
@@ -61,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from collections import defaultdict
 
 import numpy as np
@@ -69,9 +71,58 @@ from repro.core import discovery as seq
 from repro.core.corpus import Table
 from repro.core.discovery import DiscoveryStats, TopKEntry
 from repro.core.index import CandidateBlock, MateIndex
-from repro.kernels import ops
+from repro.kernels import ops, registry
+from repro.kernels.registry import Backend
 
 DEFAULT_BATCH_TABLES = 256
+
+# sentinel distinguishing "kwarg not passed" from an explicit None/False on
+# the deprecated use_kernel=/fused= flags (both carried meaning)
+_UNSET = object()
+
+
+def resolve_engine_backend(
+    backend: Backend | str | None = None,
+    use_kernel=_UNSET,
+    fused=_UNSET,
+    caller: str = "discover_batched",
+) -> Backend:
+    """One resolved ``Backend`` per engine call — including the deprecation
+    mapping from the pre-registry ``use_kernel=``/``fused=`` booleans.
+
+    The legacy flags warn and translate to the exact backend the old
+    dispatch would have taken (results stay bit-identical):
+
+      * ``use_kernel=False``            -> 'numpy' (host oracle), beats fused
+      * ``fused=True``                  -> 'fused'
+      * ``fused=False`` under a fused
+        default (env var / TPU)         -> 'pallas' (the composed pin)
+      * ``fused=None`` / flags unset    -> registry resolution
+    """
+    if use_kernel is _UNSET and fused is _UNSET:
+        return registry.resolve_backend(backend)
+    if backend is not None:
+        raise TypeError(
+            f"{caller}: pass either backend= or the deprecated "
+            "use_kernel=/fused= flags, not both"
+        )
+    warnings.warn(
+        f"{caller}(use_kernel=..., fused=...) is deprecated; pass "
+        "backend= (a kernels.registry.Backend or registered name) or use "
+        "core.session.MateSession",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    use_kernel = True if use_kernel is _UNSET else use_kernel
+    fused = None if fused is _UNSET else fused
+    if not use_kernel:
+        return Backend("numpy")
+    if fused is True:
+        return Backend("fused")
+    resolved = registry.resolve_backend(None)
+    if fused is False and resolved.fused:
+        return Backend("pallas")  # explicit fused=False pins the composed path
+    return resolved
 
 
 @dataclasses.dataclass
@@ -127,18 +178,18 @@ def _segment_ids(table_ptr: np.ndarray, t_start: int, t_stop: int) -> np.ndarray
     )
 
 
-def _hits_counts_host(row_sk, q_sk, elig, seg, n_tables, use_kernel):
+def _hits_counts_host(row_sk, q_sk, elig, seg, n_tables, backend: Backend):
     """Host-side hits + per-table counts: one filter launch, full readback.
 
     The right call when the top-k bound cannot prune yet (heap not full) —
     every hit block is about to be verified anyway, so fusing the count
     reduction into the launch would add device work without saving a byte.
     """
-    if not use_kernel:
+    if not backend.device:
         return ops.filter_hits_table_counts(
-            row_sk, q_sk, elig, seg, n_tables, use_device=False
+            row_sk, q_sk, elig, seg, n_tables, backend="numpy"
         )
-    hits = ops.filter_match_auto(row_sk, q_sk) & elig
+    hits = ops.filter_match_auto(row_sk, q_sk, backend=backend) & elig
     counts = np.bincount(
         seg, weights=hits.sum(axis=1), minlength=max(n_tables, 1)
     ).astype(np.int32)
@@ -225,6 +276,7 @@ def _score_tables(
     rule1: bool = False,
     row_sk: np.ndarray | None = None,
     elig: np.ndarray | None = None,
+    prefetch_frac: float = _PREFETCH_FRAC,
 ) -> None:
     """Verify (or rule-2-prune) tables [t_start, t_stop) of the plan's block,
     whose items live at ``block`` offsets ``base:`` covered by hits/rows.
@@ -261,7 +313,7 @@ def _score_tables(
             (alive * np.diff(ptr[t_start : t_stop + 1])).sum()
         )
         total = int(ptr[t_stop] - ptr[t_start])
-        if total and n_alive >= _PREFETCH_FRAC * total:
+        if total and n_alive >= prefetch_frac * total:
             hits = np.asarray(hits)
             stats.filter_readback_bytes += hits.size
             device_hits = False
@@ -295,8 +347,12 @@ def discover_batched(
     k: int = 10,
     batch_tables: int = DEFAULT_BATCH_TABLES,
     init_mode: str = "cardinality",
-    use_kernel: bool = True,
-    fused: bool | None = None,
+    backend: Backend | str | None = None,
+    *,
+    prefetch_frac: float = _PREFETCH_FRAC,
+    fused_block_n: int | None = None,
+    use_kernel=_UNSET,
+    fused=_UNSET,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
 
@@ -306,17 +362,18 @@ def discover_batched(
     slices are transferred solely for tables that survive pruning and need
     exact verification.
 
-    ``fused`` selects the fused filter+segment-count kernel (counts-only
-    readback — the match matrix is never materialised, not even in HBM, so
+    ``backend`` selects the §6.3 filter implementation (a resolved
+    ``kernels.registry.Backend`` or a registered name); None follows the
+    registry precedence: ``MATE_FILTER_BACKEND`` env var, then the platform
+    default (fused on TPU, size-based auto split elsewhere).  On 'fused' the
+    match matrix is never materialised — not even in HBM — so
     ``stats.filter_matrix_bytes`` stays 0 and surviving tables' slices are
-    recomputed on demand).  None (default) follows the backend dispatch:
-    fused on TPU or under ``MATE_FILTER_BACKEND=fused``, composed otherwise.
+    recomputed on demand.  ``use_kernel=``/``fused=`` are deprecated shims
+    mapped by ``resolve_engine_backend`` (bit-identical results).
     """
+    bk = resolve_engine_backend(backend, use_kernel, fused, "discover_batched")
     plan = plan_query(index, query, q_cols, init_mode)
     stats, block = plan.stats, plan.block
-    if fused is None:
-        fused = ops.fused_filter_default()
-    fused = fused and use_kernel
     topk = _TopK(k)
     n_tables = block.n_tables
     for start in range(0, n_tables, batch_tables):
@@ -335,36 +392,34 @@ def discover_batched(
         seg = _segment_ids(block.table_ptr, start, stop)
         stats.pl_items_checked += int(rows.shape[0])
         stats.filter_checks += int(elig.sum())
-        if fused:
+        if bk.fused:
             # fused filter+segment-count launch: the match matrix is never
             # produced (zero filter_matrix_bytes), only the counts vector
             # comes back; surviving tables' slices are recomputed on demand
             # in _score_tables.  (ops falls back to the composed path above
             # its table cap — hits non-None — and stats must follow suit.)
             hits, counts = ops.filter_hits_table_counts(
-                row_sk, plan.q_sk, elig, seg, stop - start, backend="fused"
+                row_sk, plan.q_sk, elig, seg, stop - start, backend=bk,
+                fused_block_n=fused_block_n,
             )
             if hits is None:
                 stats.filter_fused_launches += 1
             else:
                 stats.filter_matrix_bytes += int(elig.size)
-        elif use_kernel and topk.full and topk.bound() > 0:
+        elif bk.device and topk.full and topk.bound() > 0:
             # bound can prune → composed device launch: hits stay on device,
             # only the per-table counts vector is read back; surviving
-            # tables' slices transfer lazily in _score_tables.  An explicit
-            # fused=False must stick: pin the composed kernel path when the
-            # env/TPU default would otherwise re-route this call to fused.
+            # tables' slices transfer lazily in _score_tables.
             stats.filter_matrix_bytes += int(elig.size)
             hits, counts = ops.filter_hits_table_counts(
-                row_sk, plan.q_sk, elig, seg, stop - start,
-                backend="pallas" if ops.fused_filter_default() else None,
+                row_sk, plan.q_sk, elig, seg, stop - start, backend=bk,
             )
         else:
             # heap not full (bound 0): nothing can be pruned, every hit
             # block is about to be verified — single-transfer path.
             stats.filter_matrix_bytes += int(elig.size)
             hits, counts = _hits_counts_host(
-                row_sk, plan.q_sk, elig, seg, stop - start, use_kernel
+                row_sk, plan.q_sk, elig, seg, stop - start, bk
             )
         # readback = match-matrix bytes materialised host-side: the whole
         # matrix when any path produced host hits (size-based numpy
@@ -377,7 +432,7 @@ def discover_batched(
         stats.filter_passed += int(counts.sum())
         _score_tables(
             index, plan, topk, hits, counts, rows, start, stop, lo,
-            row_sk=row_sk, elig=elig,
+            row_sk=row_sk, elig=elig, prefetch_frac=prefetch_frac,
         )
     return topk.entries(), stats
 
@@ -387,8 +442,12 @@ def discover_many(
     queries: list[tuple[Table, list[int]]],
     k: int | list[int] = 10,
     init_mode: str = "cardinality",
-    use_kernel: bool = True,
-    fused: bool | None = None,
+    backend: Backend | str | None = None,
+    *,
+    prefetch_frac: float = _PREFETCH_FRAC,
+    fused_block_n: int | None = None,
+    use_kernel=_UNSET,
+    fused=_UNSET,
 ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
     """Multi-query discovery sharing ONE filter launch.
 
@@ -397,8 +456,9 @@ def discover_many(
     scored with the same rule-1/rule-2 + heap semantics, so each request's
     top-k is bit-identical to its solo ``discover``/``discover_batched`` run.
 
-    ``fused`` (None → backend dispatch: TPU / MATE_FILTER_BACKEND=fused)
-    swaps the group launch for the fused filter+segment-count kernel: the
+    ``backend`` resolves exactly as in ``discover_batched``
+    (``use_kernel=``/``fused=`` are the same deprecated shims).  A 'fused'
+    backend swaps the group launch for the fused filter+segment-count kernel: the
     (Σ rows × Σ keys) match matrix — the expensive part of the cross-product
     trade below — is never materialised; only the group counts vector comes
     back, and each request's surviving tables recompute their (own-keys-only)
@@ -413,12 +473,10 @@ def discover_many(
     groups bounded (``DiscoveryEngine(batch=...)``, default 8) rather than
     fusing unbounded request sets.
     """
+    bk = resolve_engine_backend(backend, use_kernel, fused, "discover_many")
     ks = [k] * len(queries) if isinstance(k, int) else list(k)
     assert len(ks) == len(queries)
     plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
-    if fused is None:
-        fused = ops.fused_filter_default()
-    fused = fused and use_kernel
     n_tables_all = 0
     row_sk_all = hits_all = counts_all = None
     if plans:
@@ -441,7 +499,7 @@ def discover_many(
             k_off += ki
             n_tables_all += ti
         row_sk_all = index.superkey_of_rows(rows_all)
-        if fused:
+        if bk.fused:
             # ONE fused filter+segment-count launch for the whole group: the
             # (Σ rows × Σ keys) matrix is never materialised; only the group
             # counts vector is read back.  Surviving tables recompute their
@@ -450,7 +508,7 @@ def discover_many(
             # already restricts each row to its own request's keys).
             hits_all, counts_all = ops.filter_hits_table_counts(
                 row_sk_all, q_all, elig_all, seg_all, n_tables_all,
-                backend="fused",
+                backend=bk, fused_block_n=fused_block_n,
             )
         else:
             # ONE subsumption launch for the whole group.  Unlike
@@ -461,7 +519,7 @@ def discover_many(
             # one transfer and the per-table rule-1/2 counts are a cheap
             # host reduction over it.
             hits_all, counts_all = _hits_counts_host(
-                row_sk_all, q_all, elig_all, seg_all, n_tables_all, use_kernel,
+                row_sk_all, q_all, elig_all, seg_all, n_tables_all, bk,
             )
     out: list[tuple[list[TopKEntry], DiscoveryStats]] = []
     r_off = k_off = t_off = 0
@@ -495,6 +553,7 @@ def discover_many(
             rule1=True,
             row_sk=None if row_sk_all is None else row_sk_all[r_off : r_off + n_items],
             elig=plan.elig,
+            prefetch_frac=prefetch_frac,
         )
         r_off += n_items
         k_off += n_keys

@@ -23,11 +23,15 @@ from __future__ import annotations
 
 import functools
 import inspect
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import registry
+from repro.kernels.registry import Backend
 
 # jax.shard_map landed after 0.4.x; fall back to the experimental home
 _shard_map = getattr(jax, "shard_map", None)
@@ -149,14 +153,54 @@ _FILTER_IMPLS = {
     "fused": filter_counts_local_fused,
 }
 
+# deprecated-impl sentinel: distinguishes "not passed" from an explicit value
+_UNSET = object()
+
+
+def shard_impl_for(backend: Backend | str | None) -> str:
+    """Map a resolved filter ``Backend`` onto a per-shard impl name.
+
+    A shard-impl name ('broadcast' | 'blocked' | 'fused') passes through
+    directly; a registry backend maps 'fused' -> the fused per-shard launch
+    and every composed/host backend -> the broadcast baseline (the composed
+    backends differ only in how the ENGINES consume the match matrix, which
+    never exists per shard here).  None follows the registry precedence, so
+    ``MATE_FILTER_BACKEND=fused`` and the TPU platform default select the
+    fused shard launch without any caller plumbing.
+    """
+    if isinstance(backend, str) and backend in _FILTER_IMPLS:
+        return backend
+    bk = registry.resolve_backend(backend)
+    return "fused" if bk.fused else "broadcast"
+
 
 def make_distributed_filter(
-    mesh: Mesh, n_tables: int, row_axes: tuple[str, ...], impl: str = "broadcast"
+    mesh: Mesh,
+    n_tables: int,
+    row_axes: tuple[str, ...],
+    backend: Backend | str | None = None,
+    impl=_UNSET,
 ):
     """jit'd (superkeys, row_tables, query_sks) -> (table_counts, key_counts)
     with rows sharded over ``row_axes`` and outputs replicated (psum).
-    impl: 'broadcast' (baseline) | 'blocked' (lane-unrolled streaming) |
-    'fused' (single Pallas filter+segment-count launch per shard)."""
+
+    ``backend`` is a resolved registry ``Backend``, a registered backend
+    name, or a shard-impl name: 'broadcast' (baseline) | 'blocked'
+    (lane-unrolled streaming) | 'fused' (single Pallas filter+segment-count
+    launch per shard).  None resolves via the registry (env var, then
+    platform default).  ``impl=`` is the deprecated pre-registry spelling.
+    """
+    if impl is not _UNSET:
+        warnings.warn(
+            "make_distributed_filter(impl=...) is deprecated; pass backend= "
+            "(a shard-impl name or kernels.registry Backend)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if backend is not None:
+            raise TypeError("pass either backend= or the deprecated impl=, not both")
+        backend = impl
+    impl = shard_impl_for(backend)
     local = _FILTER_IMPLS[impl]
     extra = _no_rep_check_kwargs() if impl == "fused" else {}
 

@@ -1,0 +1,233 @@
+"""Unified MATE discovery surface: one frozen config, one session object.
+
+MATE's pipeline (paper §4–6: super-key index → XASH filter → verification)
+is one system, but three PRs of growth left four entry points
+(``discover``, ``discover_batched``, ``discover_many``, ``DiscoveryEngine``)
+each re-threading ``bits``/``k``/``batch_tables`` positionally and selecting
+the filter backend through disjoint idioms.  This module collapses that to:
+
+  * ``DiscoveryConfig`` — a FROZEN dataclass holding every knob of the
+    online phase (hash width, default top-k, filter backend, init-column
+    heuristic, batching, readback policy, serving window/deadline).  Being
+    immutable and hashable it is exactly the thing a request loop holds and
+    the thing launch caches key on.
+  * ``MateSession`` — the facade owning the ``MateIndex``, the backend
+    resolved ONCE through ``kernels.registry`` (explicit config > env var >
+    platform default), and per-session aggregate stats.  ``build`` runs the
+    offline phase; ``discover`` / ``discover_many`` run the online phase
+    through the batched kernel engines with results bit-identical to the
+    pre-session entry points (and to scalar Algorithm 1).
+
+``serve.engine.DiscoveryEngine`` is rebuilt on top of a ``MateSession`` as
+the async-capable serving loop (arrival-window batching, deadlines,
+futures); this module stays synchronous and loop-free on purpose — a
+session is safe to embed anywhere, including inside that loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import batched as batched_lib
+from repro.core import xash
+from repro.core.corpus import Corpus, Table
+from repro.core.discovery import DiscoveryStats, TopKEntry
+from repro.core.index import MateIndex
+from repro.kernels import registry
+from repro.kernels.registry import Backend
+
+# super-key widths the kernels are exercised at (4/8/16 uint32 lanes)
+VALID_BITS = (128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscoveryConfig:
+    """Every knob of a MATE deployment, in one immutable object.
+
+    Offline phase:
+      bits / hash_name / use_corpus_char_freq — index build parameters
+        (``bits`` is the super-key width: 128/256/512 → 4/8/16 uint32 lanes).
+
+    Online phase:
+      k            — default top-k per request (per-request override allowed).
+      backend      — filter backend name ('fused' | 'pallas' | 'xla' |
+                     'numpy' | 'auto') or None for registry resolution
+                     (``MATE_FILTER_BACKEND``, then platform default).
+      init_mode    — §6.1 initial-column heuristic.
+      batch_tables — tables per filter launch in ``discover``.
+      fused_block_n — optional row-block override for the fused kernel
+                     (power of two ≥ 128; clamped to the VMEM budget).
+      prefetch_frac — readback policy: below this fraction of batch items
+                     surviving the entry bound, per-table hit-slice
+                     readbacks beat one whole-batch transfer.
+
+    Serving (consumed by ``serve.engine.DiscoveryEngine``):
+      window       — max requests per shared filter launch (group size).
+      flush_after  — seconds a queued request may wait for its group to
+                     fill before the engine serves a partial group
+                     (None: only full groups flush; ``flush()`` always
+                     drains regardless).
+    """
+
+    bits: int = 128
+    k: int = 10
+    backend: str | None = None
+    init_mode: str = "cardinality"
+    batch_tables: int = batched_lib.DEFAULT_BATCH_TABLES
+    fused_block_n: int | None = None
+    prefetch_frac: float = batched_lib._PREFETCH_FRAC
+    hash_name: str = "xash"
+    use_corpus_char_freq: bool = True
+    window: int = 8
+    flush_after: float | None = None
+
+    def __post_init__(self):
+        if self.bits not in VALID_BITS:
+            raise ValueError(f"bits must be one of {VALID_BITS}, got {self.bits}")
+        if self.backend is not None:
+            registry.resolve_backend(self.backend)  # raises on unknown names
+        if self.fused_block_n is not None and (
+            self.fused_block_n < 128
+            or self.fused_block_n & (self.fused_block_n - 1)
+        ):
+            raise ValueError(
+                f"fused_block_n must be a power of two >= 128, got {self.fused_block_n}"
+            )
+        if not 0.0 <= self.prefetch_frac <= 1.0:
+            raise ValueError(f"prefetch_frac must be in [0, 1], got {self.prefetch_frac}")
+        if self.batch_tables < 1:
+            raise ValueError(f"batch_tables must be >= 1, got {self.batch_tables}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.flush_after is not None and self.flush_after < 0:
+            raise ValueError(f"flush_after must be >= 0, got {self.flush_after}")
+
+    def resolve_backend(self) -> Backend:
+        """The backend this config selects, under the registry precedence."""
+        return registry.resolve_backend(self.backend)
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Aggregate accounting across every request a session served."""
+
+    requests: int = 0
+    filter_checks: int = 0
+    filter_passed: int = 0
+    verified_tp: int = 0
+    verified_fp: int = 0
+    filter_matrix_bytes: int = 0
+    filter_readback_bytes: int = 0
+    filter_fused_launches: int = 0
+
+    def absorb(self, stats: DiscoveryStats) -> None:
+        self.requests += 1
+        self.filter_checks += stats.filter_checks
+        self.filter_passed += stats.filter_passed
+        self.verified_tp += stats.verified_tp
+        self.verified_fp += stats.verified_fp
+        self.filter_matrix_bytes += stats.filter_matrix_bytes
+        self.filter_readback_bytes += stats.filter_readback_bytes
+        self.filter_fused_launches += stats.filter_fused_launches
+
+    @property
+    def precision(self) -> float:
+        denom = self.verified_tp + self.verified_fp
+        return self.verified_tp / denom if denom else 1.0
+
+
+class MateSession:
+    """One indexed lake + one resolved backend + one config = one session.
+
+    ``build`` runs the offline phase from a corpus; the constructor wraps an
+    already-built ``MateIndex`` (the config's ``bits``/``hash_name`` are
+    adopted from the index, which is the ground truth for what was built).
+    The backend is resolved exactly once, at construction — a session never
+    re-reads the environment, so a long-lived serving process cannot change
+    dispatch mid-flight.
+    """
+
+    def __init__(self, index: MateIndex, config: DiscoveryConfig | None = None):
+        config = config or DiscoveryConfig()
+        # the index is ground truth for offline-phase knobs; keep the frozen
+        # config consistent with it so session.config never lies.
+        config = dataclasses.replace(
+            config, bits=index.bits, hash_name=index.hash_name
+        )
+        self.index = index
+        self.config = config
+        self.backend = config.resolve_backend()
+        self.stats = SessionStats()
+
+    @classmethod
+    def build(
+        cls, corpus: Corpus, config: DiscoveryConfig | None = None
+    ) -> "MateSession":
+        """Offline phase (§4/§5): hash + index ``corpus`` per ``config``."""
+        config = config or DiscoveryConfig()
+        index = MateIndex(
+            corpus,
+            cfg=xash.XashConfig(bits=config.bits),
+            hash_name=config.hash_name,
+            use_corpus_char_freq=config.use_corpus_char_freq,
+        )
+        return cls(index, config)
+
+    @property
+    def bits(self) -> int:
+        return self.index.bits
+
+    def discover(
+        self, query: Table, q_cols: list[int], k: int | None = None
+    ) -> tuple[list[TopKEntry], DiscoveryStats]:
+        """Top-k n-ary join discovery for one query (batched Algorithm 1)."""
+        entries, stats = batched_lib.discover_batched(
+            self.index,
+            query,
+            q_cols,
+            k=self.config.k if k is None else k,
+            batch_tables=self.config.batch_tables,
+            init_mode=self.config.init_mode,
+            backend=self.backend,
+            prefetch_frac=self.config.prefetch_frac,
+            fused_block_n=self.config.fused_block_n,
+        )
+        self.stats.absorb(stats)
+        return entries, stats
+
+    def discover_many(
+        self,
+        queries: list[tuple[Table, list[int]]],
+        k: int | list[int] | None = None,
+    ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
+        """Multi-query discovery sharing ONE filter launch (group batching)."""
+        out = batched_lib.discover_many(
+            self.index,
+            queries,
+            k=self.config.k if k is None else k,
+            init_mode=self.config.init_mode,
+            backend=self.backend,
+            prefetch_frac=self.config.prefetch_frac,
+            fused_block_n=self.config.fused_block_n,
+        )
+        for _, stats in out:
+            self.stats.absorb(stats)
+        return out
+
+    # index mutation passes through (§5.4): the session stays valid because
+    # MateIndex updates are in-place and the backend/config hold no arrays.
+    def insert_table(self, cells: list[list[str]], name: str = "") -> int:
+        return self.index.insert_table(cells, name)
+
+    def delete_table(self, table_id: int) -> None:
+        self.index.delete_table(table_id)
+
+    def __repr__(self) -> str:
+        return (
+            f"MateSession(tables={len(self.index.corpus.tables)}, "
+            f"bits={self.bits}, hash={self.index.hash_name}, "
+            f"backend={self.backend.name}[{self.backend.source}], "
+            f"served={self.stats.requests})"
+        )

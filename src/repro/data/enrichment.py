@@ -14,21 +14,27 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import discovery
-from repro.core.batched import discover_batched
 from repro.core.corpus import Table
 from repro.core.index import MateIndex
+from repro.core.session import MateSession
 
 
 def enrich(
-    index: MateIndex,
+    source: MateIndex | MateSession,
     base: Table,
     key_cols: list[int],
     k: int = 5,
     max_new_cols: int = 8,
 ) -> tuple[Table, list[dict]]:
-    """Returns (enriched table, provenance records)."""
-    topk, _stats = discover_batched(index, base, key_cols, k=k)
-    corpus = index.corpus
+    """Returns (enriched table, provenance records).
+
+    ``source`` is a ``MateSession`` (preferred — discovery runs through its
+    resolved backend and counts toward its stats) or a bare ``MateIndex``
+    (wrapped in a default-config session on the fly).
+    """
+    session = source if isinstance(source, MateSession) else MateSession(source)
+    topk, _stats = session.discover(base, key_cols, k=k)
+    corpus = session.index.corpus
     enriched = [list(row) for row in base.cells]
     provenance = []
     new_cols = 0

@@ -8,7 +8,6 @@ the kernels run everywhere; on TPU backends the real Mosaic path is used).
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -16,35 +15,20 @@ import numpy as np
 
 from repro.core import encoding
 from repro.core.xash import DEFAULT_CONFIG, XashConfig
-from repro.kernels import filter_kernel, xash_kernel
-
-# Force the row-filter dispatch path (CI matrix / debugging):
-#   MATE_FILTER_BACKEND=fused   -> fused filter+segment-count Pallas kernel
-#                                  (counts-only readback; interpret off-TPU)
-#   MATE_FILTER_BACKEND=pallas  -> composed Pallas filter_kernel + XLA
-#                                  segment-sum (interpret mode off-TPU)
-#   MATE_FILTER_BACKEND=xla     -> vectorised XLA subsumption
-#   MATE_FILTER_BACKEND=numpy   -> host-side numpy oracle
-_BACKEND_ENV = "MATE_FILTER_BACKEND"
+from repro.kernels import filter_kernel, registry, xash_kernel
+from repro.kernels.registry import Backend
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _filter_backend() -> str:
-    """'fused' | 'pallas' | 'xla' | 'numpy' | 'auto' (size-based split)."""
-    forced = os.environ.get(_BACKEND_ENV, "").strip().lower()
-    if forced in ("fused", "pallas", "xla", "numpy"):
-        return forced
-    return "fused" if jax.default_backend() == "tpu" else "auto"
-
-
 def fused_filter_default() -> bool:
-    """True when the engines should default to the fused counts-only launch
-    (forced via MATE_FILTER_BACKEND=fused, or running on a real TPU where the
-    fused kernel is the roofline path)."""
-    return _filter_backend() == "fused"
+    """True when the unpinned dispatch resolves to the fused counts-only
+    launch (``MATE_FILTER_BACKEND=fused``, or a real TPU where the fused
+    kernel is the roofline path).  Selection itself lives in
+    ``kernels.registry`` — this is a convenience predicate over it."""
+    return registry.resolve_backend().fused
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
@@ -191,6 +175,7 @@ def _bucket(size: int, minimum: int) -> int:
 def filter_match_auto(
     row_sk: np.ndarray | jnp.ndarray,
     query_sk: np.ndarray | jnp.ndarray,
+    backend: Backend | str | None = None,
 ) -> np.ndarray:
     """Backend-dispatched super-key row filter (§6.3): bool[n, q] on the host.
 
@@ -199,13 +184,14 @@ def filter_match_auto(
     subsumption instead of the Pallas interpreter, which is orders of
     magnitude slower per launch.  Tiny blocks (< ~100k probes) short-circuit
     to numpy, where the XLA dispatch latency alone would dominate.
-    ``MATE_FILTER_BACKEND`` pins one path (the CI matrix uses it to exercise
-    interpret-mode Pallas on CPU hosts).
+    ``backend`` pins one path (resolved via ``kernels.registry``: explicit >
+    ``MATE_FILTER_BACKEND`` > platform default — the CI matrix uses the env
+    level to exercise interpret-mode Pallas on CPU hosts).
     """
     n, q = row_sk.shape[0], query_sk.shape[0]
     if n == 0 or q == 0:
         return np.zeros((n, q), dtype=bool)
-    backend = _filter_backend()
+    backend = registry.resolve_backend(backend).name
     if backend == "fused":
         backend = "pallas"  # fused has no matrix output; same kernel family
     if backend == "auto":
@@ -265,6 +251,7 @@ def filter_table_counts(
     *,
     mode: str = "sum",
     interpret: bool | None = None,
+    block_n: int | None = None,
 ) -> np.ndarray:
     """Fused filter+segment-count launch: per-table eligible-hit counts with
     COUNTS-ONLY readback — the rows × queries match matrix is never
@@ -278,6 +265,9 @@ def filter_table_counts(
       seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
       n_tables: number of tables covered by this block.
       mode:     'sum' (eligible hits per table) | 'any' (rows with ≥1 hit).
+      block_n:  optional power-of-two row-block override
+                (``DiscoveryConfig.fused_block_n``); clamped to the VMEM
+                budget block, so it can only shrink the tile, never blow it.
     Returns:
       int32[n_tables] counts on the host — the only transfer.
     """
@@ -291,7 +281,11 @@ def filter_table_counts(
     tb = max(-(-n_tables // 128) * 128, 128)
     # power-of-two block ≤ nb: divides both pow2 buckets and 8192-multiples,
     # so the grid covers every padded row exactly
-    block_n = min(nb, filter_kernel.fused_block_n(tb))
+    budget_n = filter_kernel.fused_block_n(tb)
+    if block_n is not None:
+        assert block_n >= 128 and block_n & (block_n - 1) == 0, block_n
+        budget_n = min(budget_n, block_n)
+    block_n = min(nb, budget_n)
     block_q = qb if mode == "any" else min(qb, filter_kernel.DEFAULT_BLOCK_Q)
     rows_p = np.zeros((nb, row_sk.shape[1]), dtype=np.uint32)
     rows_p[:n] = row_sk
@@ -328,7 +322,8 @@ def filter_hits_table_counts(
     n_tables: int,
     *,
     use_device: bool = True,
-    backend: str | None = None,
+    backend: Backend | str | None = None,
+    fused_block_n: int | None = None,
 ) -> tuple[np.ndarray | jnp.ndarray | None, np.ndarray]:
     """Device-side inputs for the §6.2 bound checks: eligible filter hits plus
     per-table hit counts, WITHOUT transferring the match matrix to the host.
@@ -339,9 +334,10 @@ def filter_hits_table_counts(
       elig:     bool[n, q] init-value eligibility per (item, key) pair.
       seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
       n_tables: number of tables covered by this block.
-      use_device: False forces the host numpy path (engines' ``use_kernel``).
-      backend:  override the MATE_FILTER_BACKEND dispatch for this call
-                ('fused' | 'pallas' | 'xla' | 'numpy').
+      use_device: False forces the host numpy path (legacy ``use_kernel``).
+      backend:  resolved ``Backend`` (or name) for this call; None follows
+                the registry precedence (env var, then platform default).
+      fused_block_n: optional row-block override for the fused launch.
     Returns:
       (hits, counts) — ``counts`` int32[n_tables] is the one per-batch host
       readback the rule-1/rule-2 bounds consume.  On the composed XLA/Pallas
@@ -353,12 +349,15 @@ def filter_hits_table_counts(
     n, q = row_sk.shape[0], query_sk.shape[0]
     if n == 0 or q == 0 or n_tables == 0:
         return np.zeros((n, q), dtype=bool), np.zeros(n_tables, dtype=np.int32)
-    if backend is None:
-        backend = _filter_backend() if use_device else "numpy"
+    if not use_device:
+        backend = "numpy"
+    backend = registry.resolve_backend(backend).name
     if backend == "fused" and n_tables > _FUSED_MAX_TABLES:
         backend = "pallas"  # scatter tile would blow VMEM; composed oracle
     if backend == "fused":
-        counts = filter_table_counts(row_sk, query_sk, elig, seg_ids, n_tables)
+        counts = filter_table_counts(
+            row_sk, query_sk, elig, seg_ids, n_tables, block_n=fused_block_n
+        )
         return None, counts
     if backend == "auto":
         backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"

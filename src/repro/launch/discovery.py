@@ -1,11 +1,16 @@
 """MATE discovery service driver:
 ``python -m repro.launch.discovery [--n-tables 400] [--queries 5] [--hash xash]
-[--bits 128|256|512]``
+[--bits 128|256|512] [--backend fused|pallas|xla|numpy|auto]``
 
-End-to-end run of the paper's system on a synthetic lake: build the index
-(offline phase), run top-k n-ary join discovery (online phase) with both the
-faithful Algorithm 1 engine and the batched TPU-style engine, and report the
-paper's metrics (precision, FP counts, filtering power, runtimes).
+End-to-end run of the paper's system on a synthetic lake through the unified
+``MateSession`` surface: build the session (offline phase), run top-k n-ary
+join discovery (online phase) with both the faithful Algorithm 1 engine and
+the session's batched engine, and report the paper's metrics (precision, FP
+counts, filtering power, runtimes).
+
+``--backend`` pins the §6.3 filter backend through ``DiscoveryConfig`` — the
+highest-precedence level of the registry (config > ``MATE_FILTER_BACKEND`` >
+platform default); omitted, the session resolves it per that rule.
 
 ``--mesh dxm`` additionally runs the shard_map-distributed filter to show
 the corpus-sharded layout (1x1 on CPU; 16x16 on a real pod).
@@ -20,11 +25,11 @@ import numpy as np
 
 import jax
 
-from repro.core import discovery, xash
-from repro.core.batched import discover_batched
-from repro.core.index import MateIndex
+from repro.core import discovery
+from repro.core.session import DiscoveryConfig, MateSession
 from repro.core import distributed
 from repro.data import synthetic
+from repro.kernels import registry
 from repro.launch import mesh as meshlib
 from repro.serve.engine import DiscoveryEngine
 
@@ -40,6 +45,11 @@ def main(argv=None):
                     choices=["xash", "bf", "ht", "murmur", "md5", "city", "simhash"])
     ap.add_argument("--bits", type=int, default=128, choices=[128, 256, 512],
                     help="superkey hash width (uint32 lanes = bits/32)")
+    ap.add_argument("--backend", default=None, choices=registry.backend_names(),
+                    help="filter backend (config-level pin; default: "
+                         "MATE_FILTER_BACKEND, then platform default)")
+    ap.add_argument("--flush-after", type=float, default=None,
+                    help="serving deadline (s) for partial DiscoveryEngine groups")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args(argv)
@@ -48,13 +58,18 @@ def main(argv=None):
     corpus = synthetic.make_corpus(
         synthetic.SyntheticSpec(n_tables=args.n_tables, seed=args.seed)
     )
+    config = DiscoveryConfig(
+        bits=args.bits, k=args.k, backend=args.backend, hash_name=args.hash,
+        flush_after=args.flush_after,
+    )
     t0 = time.time()
-    cfg = xash.XashConfig(bits=args.bits)
-    index = MateIndex(corpus, cfg=cfg, hash_name=args.hash, use_corpus_char_freq=True)
+    session = MateSession.build(corpus, config)
+    index = session.index
     print(
         f"[mate] offline phase: indexed {corpus.total_rows} rows, "
         f"{len(corpus.unique_values)} unique values in {time.time()-t0:.2f}s "
-        f"(hash={args.hash}, bits={index.bits}, lanes={index.cfg.lanes})"
+        f"(hash={args.hash}, bits={session.bits}, lanes={index.cfg.lanes}, "
+        f"backend={session.backend.name}[{session.backend.source}])"
     )
 
     queries = synthetic.make_mixed_queries(
@@ -67,7 +82,7 @@ def main(argv=None):
         topk_seq, st = discovery.discover(index, q, q_cols, k=args.k)
         agg["t_seq"] += time.time() - t0
         t0 = time.time()
-        topk_bat, stb = discover_batched(index, q, q_cols, k=args.k)
+        topk_bat, stb = session.discover(q, q_cols)
         agg["t_batched"] += time.time() - t0
         agg["tp"] += st.verified_tp
         agg["fp"] += st.verified_fp
@@ -98,21 +113,23 @@ def main(argv=None):
 
     # multi-query serving path: requests share filter launches in slot
     # groups (the shared launch costs O(rows x keys) of the whole group,
-    # so it is bounded rather than fused across arbitrarily many queries)
-    engine = DiscoveryEngine(index, batch=min(max(len(queries), 1), 16))
-    for q, q_cols in queries:
-        engine.submit(q, q_cols, k=args.k)
+    # so it is bounded rather than fused across arbitrarily many queries).
+    # The engine wraps the SAME session: one config, one resolved backend.
+    engine = DiscoveryEngine(
+        session=session, batch=min(max(len(queries), 1), 16),
+        flush_after=args.flush_after,
+    )
+    reqs = [engine.submit(q, q_cols) for q, q_cols in queries]
     t0 = time.time()
     served = engine.flush()
     t_many = time.time() - t0
-    agree = all(
-        r.results is not None and r.stats is not None for r in served
-    )
+    agree = all(r.done and r.future.done() and r.stats is not None for r in reqs)
     print(
         f"[mate] DiscoveryEngine: {len(served)} requests in shared filter "
         f"launches of ≤{engine.batch} "
         f"({t_many:.2f}s, vs {agg['t_seq']:.2f}s sequential, all_served={agree})"
     )
+    print(f"[mate] session: {session}")
 
     if not queries:
         return
@@ -127,12 +144,17 @@ def main(argv=None):
     q, q_cols = queries[0]
     _keys, sk_of_key = discovery.build_query_superkeys(index, q, q_cols)
     qsk = np.stack(list(sk_of_key.values()))
-    fn = distributed.make_distributed_filter(mesh, len(corpus.tables), ("data",))
+    # the distributed filter resolves its per-shard impl from the same
+    # registry precedence (a fused backend runs the fused shard launch)
+    fn = distributed.make_distributed_filter(
+        mesh, len(corpus.tables), ("data",), backend=session.backend
+    )
     t0 = time.time()
     tc, kc = fn(sk, rt, qsk)
     tc.block_until_ready()
     print(
-        f"[mate] distributed filter on mesh {args.mesh}: "
+        f"[mate] distributed filter on mesh {args.mesh} "
+        f"(impl={distributed.shard_impl_for(session.backend)}): "
         f"{int(np.asarray(tc).sum())} candidate rows across "
         f"{int((np.asarray(tc) > 0).sum())} tables in {time.time()-t0:.3f}s"
     )

@@ -51,7 +51,7 @@ def lower(shape_name: str, multi_pod: bool, impl: str):
         (spec["keys"], lanes), jnp.uint32, sharding=NamedSharding(mesh, P())
     )
     fn = distributed.make_distributed_filter(
-        mesh, spec["n_tables"], row_axes, impl=impl
+        mesh, spec["n_tables"], row_axes, backend=impl
     )
     t0 = time.time()
     with mesh:

@@ -11,17 +11,25 @@ one device launch per group):
     serve_step (one decode tick) is the unit the dry-run lowers for
     decode_32k / long_500k shapes.
 
-  * ``DiscoveryEngine`` — multi-query online join discovery.  Queued
-    requests drain in groups of ``batch``; each group's candidate rows and
+  * ``DiscoveryEngine`` — multi-query online join discovery, rebuilt on top
+    of ``core.session.MateSession`` as an ASYNC-CAPABLE loop.  ``submit``
+    returns a request carrying a ``concurrent.futures.Future``; ``pump``
+    (the per-tick scheduling step) serves arrival-window groups — a group
+    launches when it fills to ``batch`` requests OR when its oldest request
+    has waited ``flush_after`` seconds — so discovery groups and LLM decode
+    ticks can interleave on one device.  Each group's candidate rows and
     query keys concatenate into ONE super-key filter launch
-    (``core.batched.discover_many``), so concurrent requests amortise the
+    (``MateSession.discover_many``), so concurrent requests amortise the
     kernel dispatch instead of filtering one query at a time.  Results are
     bit-identical to per-request ``discover``.
 """
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
+import time
+from concurrent.futures import Future
 from typing import Any
 
 import jax
@@ -32,19 +40,28 @@ from repro.core import batched as batched_lib
 from repro.core.corpus import Table
 from repro.core.discovery import DiscoveryStats, TopKEntry
 from repro.core.index import MateIndex
+from repro.core.session import DiscoveryConfig, MateSession
 from repro.models import transformer
 from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass
 class DiscoveryRequest:
-    """One top-k join-discovery request flowing through ``DiscoveryEngine``."""
+    """One top-k join-discovery request flowing through ``DiscoveryEngine``.
+
+    ``future`` resolves to ``(results, stats)`` when the request's group is
+    served — the async handle a caller can await (``asyncio.wrap_future``)
+    or block on (``future.result()``) while the engine keeps ticking;
+    ``results``/``stats`` mirror it for synchronous callers.
+    """
 
     query: Table
     q_cols: list[int]
     k: int = 10
+    arrival: float = 0.0
     results: list[TopKEntry] | None = None
     stats: DiscoveryStats | None = None
+    future: Future = dataclasses.field(default_factory=Future, repr=False)
 
     @property
     def done(self) -> bool:
@@ -52,63 +69,204 @@ class DiscoveryRequest:
 
 
 class DiscoveryEngine:
-    """Host-side loop batching concurrent discovery requests.
+    """Arrival-window batching loop over a ``MateSession``.
 
-    ``submit`` queues; ``flush`` drains the queue in groups of ``batch``,
-    each group sharing one filter launch via ``discover_many``.  The engine
-    serves whatever hash width its index was built at (``bits``): group
-    launches, device-side rule-1/2 counts and verification slices are all
-    ``lanes``-wide, so a 512-bit lake and a 128-bit lake run the same code.
+    Construction: pass a ``MateSession`` (preferred — the engine adopts its
+    config's ``window``/``flush_after``), or a bare ``MateIndex`` plus an
+    optional ``DiscoveryConfig``.  The engine serves whatever hash width and
+    backend the session resolved; ``use_kernel=``/``fused=`` are deprecated
+    shims translated by ``core.batched.resolve_engine_backend``.
 
-    ``fused`` selects the fused filter+segment-count kernel for the group
-    launches (counts-only readback, zero match-matrix bytes — see
-    ``core.batched.discover_many``); None follows the backend dispatch
-    (fused on TPU / ``MATE_FILTER_BACKEND=fused``).
+    Scheduling: ``submit`` queues a request (its ``k`` may differ per
+    request; None takes the config default).  ``pump(now)`` — the unit a
+    serving tick calls between decode steps — launches every DUE group:
+    a group is due when ``batch`` requests are waiting (window full) or the
+    oldest waiting request is ``flush_after`` seconds old (deadline).  With
+    ``flush_after=None`` only full windows launch; ``flush()`` always
+    drains everything (the synchronous path, unchanged from earlier PRs).
     """
 
     def __init__(
         self,
-        index: MateIndex,
-        batch: int = 8,
-        use_kernel: bool = True,
-        fused: bool | None = None,
+        index: MateIndex | MateSession | None = None,
+        batch: int | None = None,
+        use_kernel=batched_lib._UNSET,
+        fused=batched_lib._UNSET,
+        *,
+        session: MateSession | None = None,
+        config: DiscoveryConfig | None = None,
+        flush_after: float | None = None,
+        clock=time.monotonic,
     ):
-        self.index = index
-        self.batch = batch
-        self.use_kernel = use_kernel
-        self.fused = fused
+        if isinstance(index, MateSession):
+            session, index = index, None
+        legacy_flags = (
+            use_kernel is not batched_lib._UNSET
+            or fused is not batched_lib._UNSET
+        )
+        if session is None:
+            if index is None:
+                raise TypeError("DiscoveryEngine needs a MateSession or a MateIndex")
+            if legacy_flags and config is not None and config.backend is not None:
+                raise TypeError(
+                    "pass either DiscoveryConfig(backend=...) or the "
+                    "deprecated use_kernel=/fused= flags, not both"
+                )
+            session = MateSession(index, config)
+            if legacy_flags:
+                # legacy backend flags: warn once here, then pin the freshly
+                # built (engine-private) session to the exact backend the old
+                # dispatch would have taken.
+                session.backend = batched_lib.resolve_engine_backend(
+                    None, use_kernel, fused, "DiscoveryEngine"
+                )
+        else:
+            if index is not None or config is not None:
+                raise TypeError("pass either session= or index/config, not both")
+            if legacy_flags:
+                # a shared session's backend is resolved ONCE at construction;
+                # rewriting it here would silently change dispatch for every
+                # other holder of the session.
+                raise TypeError(
+                    "use_kernel=/fused= cannot modify an existing session — "
+                    "build the MateSession with DiscoveryConfig(backend=...)"
+                )
+        self.session = session
+        self.batch = batch if batch is not None else session.config.window
+        self.flush_after = (
+            flush_after if flush_after is not None else session.config.flush_after
+        )
+        self.clock = clock
         self.queue: list[DiscoveryRequest] = []
+
+    @property
+    def index(self) -> MateIndex:
+        return self.session.index
 
     @property
     def bits(self) -> int:
         """Superkey hash width of the underlying index."""
-        return self.index.cfg.bits
+        return self.session.bits
 
-    def submit(self, query: Table, q_cols: list[int], k: int = 10) -> DiscoveryRequest:
-        req = DiscoveryRequest(query=query, q_cols=q_cols, k=k)
+    @property
+    def backend(self):
+        """The session's resolved filter backend."""
+        return self.session.backend
+
+    def submit(
+        self,
+        query: Table,
+        q_cols: list[int],
+        k: int | None = None,
+        now: float | None = None,
+    ) -> DiscoveryRequest:
+        req = DiscoveryRequest(
+            query=query,
+            q_cols=q_cols,
+            k=self.session.config.k if k is None else k,
+            arrival=self.clock() if now is None else now,
+        )
         self.queue.append(req)
         return req
 
-    def flush(self) -> list[DiscoveryRequest]:
-        """Serve every queued request; returns them in submission order."""
-        served, self.queue = self.queue, []
-        for start in range(0, len(served), self.batch):
-            group = served[start : start + self.batch]
-            out = batched_lib.discover_many(
-                self.index,
-                [(r.query, r.q_cols) for r in group],
-                k=[r.k for r in group],
-                use_kernel=self.use_kernel,
-                fused=self.fused,
+    def _serve_group(self, group: list[DiscoveryRequest]) -> None:
+        try:
+            out = self.session.discover_many(
+                [(r.query, r.q_cols) for r in group], k=[r.k for r in group]
             )
-            for req, (entries, stats) in zip(group, out):
-                req.results, req.stats = entries, stats
+        except BaseException as e:
+            # the group is already dequeued: reject every future so sibling
+            # awaiters see the failure instead of polling forever, then let
+            # the pump caller observe the exception too.
+            for req in group:
+                if not req.future.done():
+                    req.future.set_exception(e)
+            raise
+        for req, (entries, stats) in zip(group, out):
+            req.results, req.stats = entries, stats
+            req.future.set_result((entries, stats))
+
+    def _due(self, now: float) -> bool:
+        if len(self.queue) >= self.batch:
+            return True
+        return bool(
+            self.queue
+            and self.flush_after is not None
+            and now - self.queue[0].arrival >= self.flush_after
+        )
+
+    def next_deadline(self) -> float | None:
+        """Absolute time the oldest queued request must be served by, or
+        None when nothing is waiting / no deadline policy is set."""
+        if not self.queue or self.flush_after is None:
+            return None
+        return self.queue[0].arrival + self.flush_after
+
+    def pump(self, now: float | None = None) -> list[DiscoveryRequest]:
+        """One scheduling step: launch every due group; returns requests
+        served THIS call (submission order).  O(1) when nothing is due —
+        cheap enough to call between every decode tick."""
+        now = self.clock() if now is None else now
+        served: list[DiscoveryRequest] = []
+        while self._due(now):
+            group, self.queue = self.queue[: self.batch], self.queue[self.batch :]
+            self._serve_group(group)
+            served.extend(group)
         return served
 
-    def discover(self, query: Table, q_cols: list[int], k: int = 10) -> DiscoveryRequest:
+    def flush(self) -> list[DiscoveryRequest]:
+        """Serve every queued request NOW (deadline ignored); returns them
+        in submission order.  Groups dequeue one at a time, so a failing
+        group launch rejects only ITS requests' futures — later groups stay
+        queued (futures pending) for a retry pump/flush."""
+        served: list[DiscoveryRequest] = []
+        while self.queue:
+            group, self.queue = self.queue[: self.batch], self.queue[self.batch :]
+            self._serve_group(group)
+            served.extend(group)
+        return served
+
+    def discover(
+        self, query: Table, q_cols: list[int], k: int | None = None
+    ) -> DiscoveryRequest:
         """One-shot convenience: submit + flush a single request."""
         req = self.submit(query, q_cols, k)
         self.flush()
+        return req
+
+    async def discover_async(
+        self, query: Table, q_cols: list[int], k: int | None = None
+    ) -> DiscoveryRequest:
+        """Submit and await: yields to the event loop until the request's
+        group is served.  The engine itself has no background thread — some
+        task must keep calling ``pump()`` (a serving tick, or a sibling
+        ``discover_async`` waiter: each waiter pumps when its own deadline
+        or window comes due, so a loop full of awaiting requests makes
+        progress by itself).
+
+        With NO deadline policy (``flush_after=None``) nothing would ever
+        launch a partial group, so an async waiter must not wait on the
+        window alone — it yields once (letting sibling submits land and the
+        window fill) and then drains its group immediately.  Set
+        ``flush_after`` to actually hold a window open for stragglers."""
+        req = self.submit(query, q_cols, k)
+        if self.flush_after is None:
+            await asyncio.sleep(0)  # let concurrently-spawned waiters queue
+            self.pump()
+            if not req.future.done():
+                self.flush()  # no deadline will ever fire: drain, don't spin
+        else:
+            while not req.future.done():
+                self.pump()
+                if req.future.done():
+                    break
+                deadline = self.next_deadline()
+                now = self.clock()
+                # sleep to the group deadline (or a short poll while our own
+                # group is not yet the oldest), yielding to decode ticks
+                delay = 0.001 if deadline is None else max(deadline - now, 0.0)
+                await asyncio.sleep(min(delay, 0.05))
+        req.future.result()  # propagate a group failure to THIS awaiter
         return req
 
 
@@ -135,13 +293,20 @@ def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
 
 
 class ServeEngine:
-    """Host-side loop around prefill/serve_step for real (small) models."""
+    """Host-side loop around prefill/serve_step for real (small) models.
+
+    ``on_tick`` (optional, ``callable(step)``) runs between decode steps —
+    the interleave point where a co-located ``DiscoveryEngine.pump()`` (or
+    any other host-side scheduler) gets the device while the freshly
+    dispatched decode step is in flight.
+    """
 
     def __init__(self, params, cfg: ModelConfig, batch: int, max_seq: int,
                  temperature: float = 0.0, extra_inputs: dict | None = None):
         self.params, self.cfg = params, cfg
         self.batch, self.max_seq = batch, max_seq
         self.extra = extra_inputs or {}
+        self.on_tick = None
         self.step_fn = jax.jit(make_serve_step(cfg, temperature), donate_argnums=(1,))
         self.prefill_fn = jax.jit(
             lambda p, t, **kw: transformer.prefill(p, cfg, t, max_seq, **kw)
@@ -166,6 +331,8 @@ class ServeEngine:
                         r.out.append(int(token[i]))
                 rng, sub = jax.random.split(rng)
                 token, cache = self.step_fn(self.params, cache, token, sub)
+                if self.on_tick is not None:
+                    self.on_tick(step)
             for r in group:
                 r.done = True
         return requests

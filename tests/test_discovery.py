@@ -62,8 +62,8 @@ def test_batched_engine_bit_identical(lake):
     same table ids, same joinability scores, same mappings."""
     corpus, index, query, q_cols, _ = lake
     seq, _ = discovery.discover(index, query, q_cols, k=10)
-    for use_kernel in (False, True):
-        bat, _ = discover_batched(index, query, q_cols, k=10, use_kernel=use_kernel)
+    for backend in ("numpy", None):
+        bat, _ = discover_batched(index, query, q_cols, k=10, backend=backend)
         assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
             (e.table_id, e.joinability, e.mapping) for e in bat
         ]
@@ -75,7 +75,7 @@ def test_batched_small_batches_bit_identical(lake):
     seq, _ = discovery.discover(index, query, q_cols, k=5)
     for batch_tables in (1, 7, 64):
         bat, _ = discover_batched(
-            index, query, q_cols, k=5, batch_tables=batch_tables, use_kernel=False
+            index, query, q_cols, k=5, batch_tables=batch_tables, backend="numpy"
         )
         assert [(e.table_id, e.joinability) for e in seq] == [
             (e.table_id, e.joinability) for e in bat
@@ -129,8 +129,8 @@ def test_512bit_engines_bit_identical(lake512):
     assert index.superkeys.shape[1] == 16
     seq, _ = discovery.discover(index, query, q_cols, k=10)
     want = [(e.table_id, e.joinability, e.mapping) for e in seq]
-    for use_kernel in (False, True):
-        bat, _ = discover_batched(index, query, q_cols, k=10, use_kernel=use_kernel)
+    for backend in ("numpy", None):
+        bat, _ = discover_batched(index, query, q_cols, k=10, backend=backend)
         assert [(e.table_id, e.joinability, e.mapping) for e in bat] == want
     out = discover_many(index, [(query, q_cols)] * 3, k=10)
     for entries, _stats in out:

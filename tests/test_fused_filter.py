@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import discovery, xash
 from repro.core.batched import discover_batched, discover_many
+from repro.core.session import DiscoveryConfig
 from repro.core.index import MateIndex
 from repro.data import synthetic
 from repro.kernels import ops, ref
@@ -171,13 +172,14 @@ def test_fused_saturated_rows_ignore_padded_queries():
 
 
 def test_fused_false_pins_composed_path(lake, monkeypatch):
-    """Regression: an explicit fused=False must stick even when the env/TPU
-    default dispatch is fused — the composed path materialises the matrix
-    (matrix_bytes > 0) and reports zero fused launches."""
+    """Regression: an explicit composed backend must stick even when the
+    env/TPU default dispatch is fused — the composed path materialises the
+    matrix (matrix_bytes > 0) and reports zero fused launches.  (The legacy
+    fused=False spelling of this pin is covered in test_session.)"""
     corpus, index, query, q_cols = lake
     monkeypatch.setenv("MATE_FILTER_BACKEND", "fused")
     seq, _ = discovery.discover(index, query, q_cols, k=10)
-    bat, st = discover_batched(index, query, q_cols, k=10, fused=False)
+    bat, st = discover_batched(index, query, q_cols, k=10, backend="pallas")
     assert [(e.table_id, e.joinability) for e in bat] == [
         (e.table_id, e.joinability) for e in seq
     ]
@@ -191,7 +193,7 @@ def test_fused_table_cap_fallback_accounting(lake, monkeypatch):
     corpus, index, query, q_cols = lake
     monkeypatch.setattr(ops, "_FUSED_MAX_TABLES", 4)  # force the fallback
     seq, _ = discovery.discover(index, query, q_cols, k=10)
-    bat, st = discover_batched(index, query, q_cols, k=10, fused=True)
+    bat, st = discover_batched(index, query, q_cols, k=10, backend="fused")
     assert [(e.table_id, e.joinability) for e in bat] == [
         (e.table_id, e.joinability) for e in seq
     ]
@@ -233,7 +235,7 @@ def test_fused_engine_topk_bit_identical(lake):
     want = [(e.table_id, e.joinability, e.mapping) for e in seq]
     for batch_tables in (7, 64, 256):
         bat, st = discover_batched(
-            index, query, q_cols, k=10, batch_tables=batch_tables, fused=True
+            index, query, q_cols, k=10, batch_tables=batch_tables, backend="fused"
         )
         assert [(e.table_id, e.joinability, e.mapping) for e in bat] == want
         assert st.filter_matrix_bytes == 0
@@ -250,7 +252,7 @@ def test_fused_discover_many_and_engine(lake):
     queries = [(query, q_cols)] + synthetic.make_mixed_queries(
         corpus, 2, 12, 2, seed=21
     )
-    out = discover_many(index, queries, k=[10, 3, 5], fused=True)
+    out = discover_many(index, queries, k=[10, 3, 5], backend="fused")
     for (q, qc), k_i, (entries, st) in zip(queries, [10, 3, 5], out):
         seq, _ = discovery.discover(index, q, qc, k=k_i)
         assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
@@ -258,7 +260,9 @@ def test_fused_discover_many_and_engine(lake):
         ]
         assert st.filter_matrix_bytes == 0
         assert st.filter_fused_launches == 1
-    engine = DiscoveryEngine(index, batch=2, fused=True)
+    engine = DiscoveryEngine(
+        index, batch=2, config=DiscoveryConfig(backend="fused")
+    )
     reqs = [engine.submit(q, qc, k=5) for q, qc in queries]
     engine.flush()
     for (q, qc), r in zip(queries, reqs):
@@ -276,7 +280,7 @@ def test_fused_engine_topk_across_widths(lake, bits):
     corpus, _index, query, q_cols = lake
     index = MateIndex(corpus, cfg=xash.XashConfig(bits=bits))
     seq, _ = discovery.discover(index, query, q_cols, k=10)
-    bat, st = discover_batched(index, query, q_cols, k=10, fused=True)
+    bat, st = discover_batched(index, query, q_cols, k=10, backend="fused")
     assert [(e.table_id, e.joinability, e.mapping) for e in bat] == [
         (e.table_id, e.joinability, e.mapping) for e in seq
     ]
@@ -304,7 +308,7 @@ def test_fused_distributed_filter_matches_broadcast():
         idx.superkeys, row_tables, mesh, ("data",)
     )
     fn = distributed.make_distributed_filter(
-        mesh, len(corpus.tables), ("data",), impl="fused"
+        mesh, len(corpus.tables), ("data",), backend="fused"
     )
     tc, kc = fn(sk, rt, qsk)
     tc_ref, kc_ref = distributed.filter_counts_local(

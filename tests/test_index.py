@@ -146,8 +146,8 @@ def test_updates_keep_engines_bit_identical():
 
     seq, _ = discovery.discover(idx, query, q_cols, k=8)
     assert tid in [e.table_id for e in seq]
-    for use_kernel in (False, True):
-        bat, _ = discover_batched(idx, query, q_cols, k=8, use_kernel=use_kernel)
+    for backend in ("numpy", None):
+        bat, _ = discover_batched(idx, query, q_cols, k=8, backend=backend)
         assert [(e.table_id, e.joinability, e.mapping) for e in seq] == [
             (e.table_id, e.joinability, e.mapping) for e in bat
         ]

@@ -1,0 +1,448 @@
+"""MateSession / DiscoveryConfig / async DiscoveryEngine acceptance.
+
+The redesign's contract (ISSUE 4): ``MateSession.discover``/``discover_many``
+top-k results are bit-identical to the pre-redesign entry points across
+widths 128/256/512 and all backends (numpy/xla/pallas/fused); the old
+``use_kernel=``/``fused=``/``impl=`` kwargs keep working for one release via
+deprecation shims with bit-identical results; and the engine's
+arrival-window batching honours window-full and flush-after-deadline
+semantics deterministically.
+"""
+
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import discovery, xash
+from repro.core.batched import discover_batched, discover_many
+from repro.core.index import MateIndex
+from repro.core.session import DiscoveryConfig, MateSession, VALID_BITS
+from repro.data import synthetic
+from repro.serve.engine import DiscoveryEngine
+from repro.kernels.registry import Backend
+
+BACKENDS = ("numpy", "xla", "pallas", "fused")
+
+
+@pytest.fixture(scope="module")
+def lake():
+    spec = synthetic.SyntheticSpec(n_tables=120, seed=0)
+    corpus = synthetic.make_corpus(spec)
+    query, q_cols, _expected, corpus = synthetic.make_query_with_ground_truth(corpus)
+    return corpus, query, q_cols
+
+
+@pytest.fixture(scope="module")
+def sessions(lake):
+    """One session per width (index builds are the expensive part)."""
+    corpus, _q, _qc = lake
+    return {
+        bits: MateSession.build(corpus, DiscoveryConfig(bits=bits))
+        for bits in VALID_BITS
+    }
+
+
+def _key(entries):
+    return [(e.table_id, e.joinability, e.mapping) for e in entries]
+
+
+# ---------------------------------------------------------------------------
+# DiscoveryConfig
+# ---------------------------------------------------------------------------
+
+def test_config_is_frozen_and_hashable():
+    cfg = DiscoveryConfig(backend="fused", bits=256)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.k = 3
+    assert hash(cfg) == hash(DiscoveryConfig(backend="fused", bits=256))
+
+
+@pytest.mark.parametrize("kw", [
+    {"bits": 96},
+    {"backend": "cuda"},
+    {"fused_block_n": 100},
+    {"fused_block_n": 384},
+    {"prefetch_frac": 1.5},
+    {"window": 0},
+    {"batch_tables": 0},
+    {"k": 0},
+    {"flush_after": -1.0},
+])
+def test_config_validation(kw):
+    with pytest.raises(ValueError):
+        DiscoveryConfig(**kw)
+
+
+def test_config_resolves_backend(monkeypatch):
+    assert DiscoveryConfig(backend="numpy").resolve_backend().name == "numpy"
+    monkeypatch.setenv("MATE_FILTER_BACKEND", "xla")
+    # config level beats env; unset config follows env
+    assert DiscoveryConfig(backend="fused").resolve_backend().name == "fused"
+    assert DiscoveryConfig().resolve_backend().name == "xla"
+
+
+def test_session_adopts_index_ground_truth(lake):
+    corpus, _q, _qc = lake
+    index = MateIndex(corpus, cfg=xash.XashConfig(bits=256))
+    session = MateSession(index, DiscoveryConfig(bits=128))
+    assert session.bits == 256 and session.config.bits == 256
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: bit-identity across widths × backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", VALID_BITS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_session_discover_bit_identical(sessions, lake, bits, backend):
+    """session.discover == scalar Algorithm 1 == pre-redesign
+    discover_batched, at every width and backend."""
+    _corpus, query, q_cols = lake
+    base = sessions[bits]
+    session = MateSession(
+        base.index, dataclasses.replace(base.config, backend=backend, k=10)
+    )
+    ref, _ = discovery.discover(session.index, query, q_cols, k=10)
+    got, stats = session.discover(query, q_cols)
+    assert _key(got) == _key(ref)
+    old, _ = discover_batched(session.index, query, q_cols, k=10, backend=backend)
+    assert _key(got) == _key(old)
+    if backend == "fused":
+        assert stats.filter_matrix_bytes == 0
+        assert stats.filter_fused_launches > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_session_discover_many_bit_identical(sessions, lake, backend):
+    corpus, query, q_cols = lake
+    base = sessions[128]
+    session = MateSession(
+        base.index, dataclasses.replace(base.config, backend=backend)
+    )
+    queries = [(query, q_cols)] + synthetic.make_mixed_queries(
+        corpus, 2, 12, 2, seed=21
+    )
+    out = session.discover_many(queries, k=[10, 3, 5])
+    for (q, qc), k_i, (entries, _st) in zip(queries, [10, 3, 5], out):
+        ref, _ = discovery.discover(session.index, q, qc, k=k_i)
+        assert _key(entries) == _key(ref)
+
+
+def test_session_stats_accumulate(sessions, lake):
+    _corpus, query, q_cols = lake
+    session = MateSession(sessions[128].index, DiscoveryConfig(k=5))
+    assert session.stats.requests == 0
+    session.discover(query, q_cols)
+    session.discover_many([(query, q_cols)] * 2)
+    assert session.stats.requests == 3
+    assert session.stats.filter_checks > 0
+    assert 0.0 <= session.stats.precision <= 1.0
+
+
+def test_session_fused_block_n_override(sessions, lake):
+    """A config-pinned fused row block changes tiling only, never results."""
+    _corpus, query, q_cols = lake
+    base = sessions[128]
+    ref, _ = base.discover(query, q_cols, k=10)
+    session = MateSession(
+        base.index,
+        DiscoveryConfig(backend="fused", fused_block_n=128, k=10),
+    )
+    got, stats = session.discover(query, q_cols)
+    assert _key(got) == _key(ref)
+    assert stats.filter_matrix_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old kwargs warn AND stay bit-identical
+# ---------------------------------------------------------------------------
+
+def test_shim_use_kernel_false(sessions, lake):
+    _corpus, query, q_cols = lake
+    index = sessions[128].index
+    new, _ = MateSession(index, DiscoveryConfig(backend="numpy")).discover(
+        query, q_cols, k=10
+    )
+    with pytest.deprecated_call():
+        old, _ = discover_batched(index, query, q_cols, k=10, use_kernel=False)
+    assert _key(old) == _key(new)
+
+
+def test_shim_fused_true(sessions, lake):
+    _corpus, query, q_cols = lake
+    index = sessions[128].index
+    new, new_st = MateSession(index, DiscoveryConfig(backend="fused")).discover(
+        query, q_cols, k=10
+    )
+    with pytest.deprecated_call():
+        old, old_st = discover_batched(index, query, q_cols, k=10, fused=True)
+    assert _key(old) == _key(new)
+    assert old_st.filter_matrix_bytes == new_st.filter_matrix_bytes == 0
+
+
+def test_shim_fused_false_pins_composed(sessions, lake, monkeypatch):
+    """fused=False under a fused env default maps to the composed pallas
+    pin — the PR 3 regression contract, now living in the shim."""
+    _corpus, query, q_cols = lake
+    index = sessions[128].index
+    monkeypatch.setenv("MATE_FILTER_BACKEND", "fused")
+    with pytest.deprecated_call():
+        old, st = discover_batched(index, query, q_cols, k=10, fused=False)
+    assert st.filter_fused_launches == 0
+    assert st.filter_matrix_bytes > 0
+    ref, _ = discovery.discover(index, query, q_cols, k=10)
+    assert _key(old) == _key(ref)
+
+
+def test_shim_discover_many_and_engine(sessions, lake):
+    _corpus, query, q_cols = lake
+    index = sessions[128].index
+    with pytest.deprecated_call():
+        old = discover_many(index, [(query, q_cols)], k=[5], fused=True)
+    new = MateSession(index, DiscoveryConfig(backend="fused")).discover_many(
+        [(query, q_cols)], k=[5]
+    )
+    assert _key(old[0][0]) == _key(new[0][0])
+    with pytest.deprecated_call():
+        eng = DiscoveryEngine(index, batch=2, fused=True)
+    assert eng.backend.name == "fused"
+    req = eng.discover(query, q_cols, k=5)
+    assert _key(req.results) == _key(new[0][0])
+
+
+def test_shim_backend_and_legacy_flags_conflict(sessions, lake):
+    _corpus, query, q_cols = lake
+    index = sessions[128].index
+    with pytest.raises(TypeError, match="not both"):
+        discover_batched(index, query, q_cols, backend="xla", fused=True)
+
+
+def test_shim_distributed_impl(sessions, lake):
+    from repro.core import distributed
+    import jax
+
+    corpus, query, q_cols = lake
+    index = sessions[128].index
+    _keys, sk_of_key = discovery.build_query_superkeys(index, query, q_cols)
+    qsk = np.stack(list(sk_of_key.values()))
+    row_tables = np.asarray(
+        corpus.table_of_row(np.arange(corpus.total_rows)), dtype=np.int32
+    )
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    sk, rt = distributed.shard_corpus_rows(
+        index.superkeys, row_tables, mesh, ("data",)
+    )
+    with pytest.deprecated_call():
+        fn_old = distributed.make_distributed_filter(
+            mesh, len(corpus.tables), ("data",), impl="blocked"
+        )
+    fn_new = distributed.make_distributed_filter(
+        mesh, len(corpus.tables), ("data",), backend="blocked"
+    )
+    tc_old, kc_old = fn_old(sk, rt, qsk)
+    tc_new, kc_new = fn_new(sk, rt, qsk)
+    assert np.array_equal(np.asarray(tc_old), np.asarray(tc_new))
+    assert np.array_equal(np.asarray(kc_old), np.asarray(kc_new))
+
+
+# ---------------------------------------------------------------------------
+# Async engine: window / deadline semantics
+# ---------------------------------------------------------------------------
+
+def _engine(session_base, queries, window=2, flush_after=1.0):
+    clock = {"t": 0.0}
+    session = MateSession(
+        session_base.index,
+        DiscoveryConfig(window=window, flush_after=flush_after, k=5),
+    )
+    eng = DiscoveryEngine(session=session, clock=lambda: clock["t"])
+    return eng, clock
+
+
+def test_engine_window_fills_before_deadline(sessions, lake):
+    corpus, query, q_cols = lake
+    queries = [(query, q_cols)] + synthetic.make_mixed_queries(
+        corpus, 2, 10, 2, seed=31
+    )
+    eng, clock = _engine(sessions[128], queries, window=2, flush_after=10.0)
+    r1 = eng.submit(*queries[0])
+    assert eng.pump() == []  # neither window nor deadline
+    r2 = eng.submit(*queries[1])
+    served = eng.pump()  # window of 2 filled — deadline irrelevant
+    assert served == [r1, r2] and r1.done and r2.done
+
+
+def test_engine_deadline_flushes_partial_group(sessions, lake):
+    _corpus, query, q_cols = lake
+    eng, clock = _engine(sessions[128], None, window=8, flush_after=1.0)
+    r1 = eng.submit(query, q_cols)
+    assert eng.pump() == []
+    clock["t"] = 0.99
+    assert eng.pump() == []  # deadline not yet reached
+    clock["t"] = 1.0
+    served = eng.pump()  # oldest request aged past flush_after
+    assert served == [r1] and r1.done
+    # future carries the payload
+    entries, stats = r1.future.result(timeout=0)
+    assert entries == r1.results and stats is r1.stats
+    ref, _ = discovery.discover(eng.index, query, q_cols, k=5)
+    assert _key(r1.results) == _key(ref)
+
+
+def test_engine_no_deadline_only_full_windows(sessions, lake):
+    _corpus, query, q_cols = lake
+    eng, clock = _engine(sessions[128], None, window=4, flush_after=None)
+    eng.submit(query, q_cols)
+    clock["t"] = 1e9
+    assert eng.pump() == []  # no deadline policy: partial group waits
+    assert eng.flush()  # explicit flush always drains
+    assert not eng.queue
+
+
+def test_engine_deadline_serves_multiple_due_groups(sessions, lake):
+    corpus, query, q_cols = lake
+    qs = [(query, q_cols)] * 5
+    eng, clock = _engine(sessions[128], None, window=2, flush_after=0.5)
+    for q, qc in qs:
+        eng.submit(q, qc)
+    clock["t"] = 1.0
+    served = eng.pump()  # two full windows + one deadline-due partial
+    assert len(served) == 5 and all(r.done for r in served)
+
+
+def test_engine_per_request_k(sessions, lake):
+    _corpus, query, q_cols = lake
+    eng, _clock = _engine(sessions[128], None, window=2, flush_after=None)
+    r_a = eng.submit(query, q_cols, k=3)
+    r_b = eng.submit(query, q_cols)  # config default k=5
+    eng.pump()
+    assert len(r_a.results) <= 3
+    ref3, _ = discovery.discover(eng.index, query, q_cols, k=3)
+    ref5, _ = discovery.discover(eng.index, query, q_cols, k=5)
+    assert _key(r_a.results) == _key(ref3)
+    assert _key(r_b.results) == _key(ref5)
+
+
+def test_engine_next_deadline(sessions, lake):
+    _corpus, query, q_cols = lake
+    eng, clock = _engine(sessions[128], None, window=4, flush_after=2.0)
+    assert eng.next_deadline() is None
+    clock["t"] = 1.0
+    eng.submit(query, q_cols)
+    assert eng.next_deadline() == pytest.approx(3.0)
+
+
+def test_engine_discover_async(sessions, lake):
+    corpus, query, q_cols = lake
+    queries = [(query, q_cols)] + synthetic.make_mixed_queries(
+        corpus, 2, 10, 2, seed=33
+    )
+    session = MateSession(
+        sessions[128].index, DiscoveryConfig(window=4, flush_after=0.02, k=5)
+    )
+    eng = DiscoveryEngine(session=session)
+
+    async def run():
+        return await asyncio.gather(
+            *[eng.discover_async(q, qc) for q, qc in queries]
+        )
+
+    reqs = asyncio.run(run())
+    assert all(r.done for r in reqs)
+    for (q, qc), r in zip(queries, reqs):
+        ref, _ = discovery.discover(eng.index, q, qc, k=5)
+        assert [(e.table_id, e.joinability) for e in r.results] == [
+            (e.table_id, e.joinability) for e in ref
+        ]
+
+
+def test_engine_discover_async_without_deadline_policy(sessions, lake):
+    """Regression: with flush_after=None an async waiter must drain its
+    group rather than spin forever waiting for a window that never fills."""
+    _corpus, query, q_cols = lake
+    eng = DiscoveryEngine(
+        session=MateSession(sessions[128].index, DiscoveryConfig(k=5))
+    )  # default config: window=8, no deadline
+
+    async def run():
+        return await asyncio.wait_for(
+            eng.discover_async(query, q_cols), timeout=30.0
+        )
+
+    req = asyncio.run(run())
+    assert req.done
+    ref, _ = discovery.discover(eng.index, query, q_cols, k=5)
+    assert _key(req.results) == _key(ref)
+
+
+def test_engine_group_failure_rejects_every_future(sessions, lake):
+    """Regression: when a group launch raises, every dequeued request's
+    future must be rejected — a sibling awaiter must not hang forever."""
+    _corpus, query, q_cols = lake
+    eng, _clock = _engine(sessions[128], None, window=2, flush_after=None)
+    good = eng.submit(query, q_cols)
+    bad = eng.submit(query, [99])  # column index out of range -> IndexError
+    with pytest.raises(IndexError):
+        eng.pump()
+    assert good.future.done() and bad.future.done()
+    with pytest.raises(IndexError):
+        good.future.result(timeout=0)
+    assert not eng.queue  # the failed group is not silently requeued
+
+    # flush(): a failing FIRST group must leave later groups queued with
+    # pending futures, not strand them dequeued-and-unresolved
+    bad2 = eng.submit(query, [99])
+    pad = eng.submit(query, [99])
+    later = eng.submit(query, q_cols)
+    with pytest.raises(IndexError):
+        eng.flush()
+    assert bad2.future.done() and pad.future.done()
+    assert not later.future.done() and eng.queue == [later]
+    eng.flush()  # retry serves the still-queued survivor
+    assert later.done and later.future.result(timeout=0)
+
+    async def run():
+        return await asyncio.wait_for(
+            eng.discover_async(query, [99]), timeout=30.0
+        )
+
+    with pytest.raises(IndexError):
+        asyncio.run(run())
+
+
+def test_engine_session_and_index_conflict(sessions):
+    with pytest.raises(TypeError):
+        DiscoveryEngine(sessions[128].index, session=sessions[128])
+    with pytest.raises(TypeError):
+        DiscoveryEngine()
+
+
+def test_engine_legacy_flags_cannot_mutate_shared_session(sessions, lake):
+    """Regression: use_kernel=/fused= must not rewrite a shared session's
+    once-resolved backend; with a private index they conflict with an
+    explicit config backend."""
+    session = MateSession(sessions[128].index, DiscoveryConfig(backend="xla"))
+    with pytest.raises(TypeError, match="cannot modify an existing session"):
+        DiscoveryEngine(session=session, fused=True)
+    assert session.backend.name == "xla"  # untouched
+    with pytest.raises(TypeError, match="not both"):
+        DiscoveryEngine(
+            sessions[128].index, config=DiscoveryConfig(backend="xla"), fused=True
+        )
+
+
+def test_enrich_accepts_session(sessions, lake):
+    from repro.data.enrichment import enrich
+    from repro.core.corpus import Table
+
+    corpus, query, q_cols = lake
+    session = sessions[128]
+    base = Table(-1, [list(r) for r in corpus.tables[0].cells[:8]])
+    served_before = session.stats.requests
+    enriched_s, prov_s = enrich(session, base, key_cols=[0], k=3)
+    enriched_i, prov_i = enrich(session.index, base, key_cols=[0], k=3)
+    assert [r for r in enriched_s.cells] == [r for r in enriched_i.cells]
+    assert prov_s == prov_i
+    assert session.stats.requests == served_before + 1

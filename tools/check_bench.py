@@ -25,6 +25,13 @@ Per metric:
 
 ``tolerance`` defaults to ``default_tolerance`` (0.20 — the >20% regression
 bar from ROADMAP "Trajectory dashboards") and can be overridden per metric.
+
+The baseline's top-level ``"backend"`` names the registry-resolved filter
+backend it was recorded under; rows in the latest run carry their own stamp
+(``benchmarks/common.save_trajectory``) and the gate REFUSES to compare a
+row recorded under a different backend — a fused-path baseline gated
+against a composed-path run would measure the dispatch switch, not a
+regression.
 A metric whose row/key is missing from the latest run FAILS the gate: a
 benchmark that silently stopped emitting is itself a regression
 (benchmarks/run.py exits non-zero on section errors for the same reason).
@@ -61,35 +68,62 @@ def parse_derived(derived: str) -> dict[str, float]:
     return out
 
 
-def latest_rows(results_dir: str, section: str) -> dict[str, dict[str, float]]:
-    """Row name -> parsed derived dict for the LAST run in BENCH_<section>.json."""
+def latest_rows(
+    results_dir: str, section: str
+) -> tuple[dict[str, dict[str, float]], dict[str, str | None]]:
+    """(row name -> parsed derived dict, row name -> recorded backend) for
+    the LAST run in BENCH_<section>.json."""
     path = os.path.join(results_dir, f"BENCH_{section}.json")
     if not os.path.exists(path):
-        return {}
+        return {}, {}
     with open(path) as f:
         history = json.load(f)
     if not history:
-        return {}
-    return {
+        return {}, {}
+    last = history[-1]
+    run_backend = last.get("backend")
+    rows = {
         row["name"]: parse_derived(row.get("derived", ""))
-        for row in history[-1]["rows"]
+        for row in last["rows"]
     }
+    backends = {
+        row["name"]: row.get("backend", run_backend) for row in last["rows"]
+    }
+    return rows, backends
 
 
 def check(baseline: dict, results_dir: str) -> list[str]:
     """Returns a list of failure descriptions (empty = gate passes)."""
     failures: list[str] = []
     default_tol = float(baseline.get("default_tolerance", 0.20))
-    cache: dict[str, dict[str, dict[str, float]]] = {}
+    base_backend = baseline.get("backend")
+    cache: dict[str, tuple[dict, dict]] = {}
     for name, spec in baseline["metrics"].items():
         section, row, key = name.split(":", 2)
         if section not in cache:
             cache[section] = latest_rows(results_dir, section)
-        rows = cache[section]
+        rows, backends = cache[section]
         cur = rows.get(row, {}).get(key)
         base = float(spec["value"])
         if cur is None:
             failures.append(f"{name}: missing from latest BENCH_{section}.json run")
+            continue
+        # REFUSE cross-backend comparisons: a baseline recorded on one
+        # dispatch path (say fused) must not gate a run recorded on another
+        # (say composed) — the ratio would measure the backend switch, not a
+        # regression.  Rows are stamped by benchmarks/common.save_trajectory;
+        # the baseline names its backend at the top level, and a metric whose
+        # row PINS a backend in code (fused/composed kernel rows) overrides
+        # it per-spec.
+        row_backend = backends.get(row)
+        want_backend = spec.get("backend", base_backend)
+        if want_backend and row_backend and row_backend != want_backend:
+            failures.append(
+                f"{name}: recorded under backend {row_backend!r} but the "
+                f"baseline was recorded under {want_backend!r} — refusing to "
+                "compare across backends (re-record the baseline or re-run "
+                "the bench under the matching MATE_FILTER_BACKEND/config)"
+            )
             continue
         if spec.get("exact"):
             if cur != base:

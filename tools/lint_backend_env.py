@@ -1,0 +1,103 @@
+"""CI lint: ``MATE_FILTER_BACKEND`` may only be read by the backend registry.
+
+The whole point of ``kernels/registry.py`` is that backend selection has ONE
+precedence rule (explicit config > env var > platform default) evaluated in
+ONE place.  Any other module touching the env var re-opens the pre-registry
+scatter, so this lint fails if the variable's name occurs as a CODE string
+literal (``os.environ.get("…")`` and friends) in any Python module under
+``src/``, ``benchmarks/``, or ``examples/`` other than the registry itself.
+Docstrings and comments may still *document* the env var — prose is not a
+read — so matching is AST-based: exact string constants outside docstring
+position.  (Tests may set it — they exercise the env level of the
+precedence through monkeypatch; CI workflow files may set it — that is the
+env level's job.)
+
+    python tools/lint_backend_env.py          # exits non-zero on violations
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# 'MATE_FILTER' + 'BACKEND' concatenated so this module doesn't flag itself
+# when the scan roots ever grow to include tools/
+NEEDLE = "MATE_FILTER" + "_BACKEND"
+SCAN_ROOTS = ("src", "benchmarks", "examples")
+ALLOWED = {os.path.join("src", "repro", "kernels", "registry.py")}
+
+
+def _docstring_constants(tree: ast.AST) -> set[int]:
+    """ids of Constant nodes sitting in docstring position."""
+    out: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(
+            node, (ast.Module, ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)
+        ):
+            body = getattr(node, "body", [])
+            if (
+                body
+                and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)
+            ):
+                out.add(id(body[0].value))
+    return out
+
+
+def reads_env_var(source: str) -> bool:
+    """True if the module uses the env-var name as a non-docstring string
+    literal — the shape every environ read takes."""
+    tree = ast.parse(source)
+    docstrings = _docstring_constants(tree)
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Constant)
+            and node.value == NEEDLE
+            and id(node) not in docstrings
+        ):
+            return True
+    return False
+
+
+def violations(repo: str = REPO) -> list[str]:
+    """Relative paths of Python modules reading the env var illegally."""
+    out: list[str] = []
+    for root in SCAN_ROOTS:
+        base = os.path.join(repo, root)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in filenames:
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, repo)
+                if rel in ALLOWED:
+                    continue
+                with open(path, encoding="utf-8") as f:
+                    src = f.read()
+                if NEEDLE in src and reads_env_var(src):
+                    out.append(rel)
+    return sorted(out)
+
+
+def main() -> int:
+    bad = violations()
+    if bad:
+        print(
+            f"{NEEDLE} may only be read by src/repro/kernels/registry.py "
+            "(route selection through kernels.registry.resolve_backend); "
+            "found in:",
+            file=sys.stderr,
+        )
+        for rel in bad:
+            print(f"  {rel}", file=sys.stderr)
+        return 1
+    print(f"lint ok: {NEEDLE} referenced only by the registry")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,240 @@
+"""Trajectory plotter over ``benchmarks/results/BENCH_*.json`` — the small
+dashboard the ROADMAP "Trajectory dashboards" item left open.
+
+Each ``BENCH_<section>.json`` accumulates one record per bench run
+({"ts", "backend", "rows"}); this tool renders the per-row trajectories so
+drift is visible BEFORE it trips the >20% ``check_bench`` gate:
+
+    PYTHONPATH=src python tools/plot_bench.py                 # all sections
+    python tools/plot_bench.py --section kernels              # one section
+    python tools/plot_bench.py --metric kernels:engine/mate_batched:vs_seq
+    python tools/plot_bench.py --ascii                        # no matplotlib
+
+Outputs one PNG per section under ``benchmarks/results/plots/`` (wall-clock
+``us_per_call`` per row, log scale, one line per row; runs recorded under a
+different backend than the latest run are marked — their points are NOT
+comparable, the same rule ``check_bench`` enforces).  ``--metric`` plots a
+single ``section:row:key`` derived metric instead.  ``--ascii`` prints
+sparkline tables to stdout and needs no display/matplotlib at all (the
+fallback when matplotlib is missing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_RESULTS = os.path.join(REPO, "benchmarks", "results")
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+from tools.check_bench import parse_derived  # noqa: E402  (single parser)
+
+SPARKS = "▁▂▃▄▅▆▇█"
+
+
+def load_sections(results_dir: str) -> dict[str, list[dict]]:
+    """section name -> run history (list of {"ts", "backend", "rows"})."""
+    out: dict[str, list[dict]] = {}
+    if not os.path.isdir(results_dir):
+        return out
+    for fname in sorted(os.listdir(results_dir)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        section = fname[len("BENCH_"):-len(".json")]
+        try:
+            with open(os.path.join(results_dir, fname)) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue
+        if isinstance(history, list) and history:
+            out[section] = history
+    return out
+
+
+def trajectories(history: list[dict]) -> dict[str, list[tuple[int, float, str]]]:
+    """row name -> [(run index, us_per_call, backend)] across the history."""
+    out: dict[str, list[tuple[int, float, str]]] = {}
+    for i, record in enumerate(history):
+        backend = record.get("backend") or "?"
+        for row in record.get("rows", []):
+            out.setdefault(row["name"], []).append(
+                (i, float(row.get("us_per_call", 0.0)),
+                 row.get("backend", backend))
+            )
+    return out
+
+
+def metric_trajectory(
+    history: list[dict], row_name: str, key: str
+) -> list[tuple[int, float, str]]:
+    """[(run index, derived-key value, backend)] for one row's derived key."""
+    out = []
+    for i, record in enumerate(history):
+        backend = record.get("backend") or "?"
+        for row in record.get("rows", []):
+            if row["name"] != row_name:
+                continue
+            val = parse_derived(row.get("derived", "")).get(key)
+            if val is not None:
+                out.append((i, val, row.get("backend", backend)))
+    return out
+
+
+def sparkline(values: list[float]) -> str:
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    span = (hi - lo) or 1.0
+    return "".join(
+        SPARKS[int((v - lo) / span * (len(SPARKS) - 1))] for v in values
+    )
+
+
+def render_ascii(section: str, history: list[dict]) -> None:
+    trajs = trajectories(history)
+    latest_backend = history[-1].get("backend") or "?"
+    print(f"\n== {section} ({len(history)} runs, latest backend: "
+          f"{latest_backend}) ==")
+    width = max((len(n) for n in trajs), default=0)
+    for name, points in sorted(trajs.items()):
+        vals = [v for _, v, _ in points]
+        mixed = len({b for _, _, b in points}) > 1
+        last = vals[-1]
+        note = "  [mixed backends]" if mixed else ""
+        print(f"  {name:<{width}}  {sparkline(vals)}  last={last:,.1f}us{note}")
+
+
+def render_png(
+    section: str, history: list[dict], out_dir: str
+) -> str | None:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    trajs = trajectories(history)
+    timed = {n: p for n, p in trajs.items() if any(v > 0 for _, v, _ in p)}
+    if not timed:
+        return None
+    latest_backend = history[-1].get("backend") or "?"
+    fig, ax = plt.subplots(figsize=(9, 5))
+    for name, points in sorted(timed.items()):
+        xs = [i for i, _, _ in points]
+        ys = [max(v, 1e-3) for _, v, _ in points]
+        (line,) = ax.plot(xs, ys, marker="o", markersize=3, linewidth=1,
+                          label=name, alpha=0.8)
+        # runs recorded under a foreign backend are not comparable points —
+        # ring them, the same rule check_bench enforces
+        off = [(i, y) for (i, _, b), y in zip(points, ys)
+               if b != latest_backend]
+        if off:
+            ax.plot([i for i, _ in off], [y for _, y in off], "x",
+                    color=line.get_color(), markersize=7)
+    ax.set_yscale("log")
+    ax.set_xlabel("bench run")
+    ax.set_ylabel("us_per_call (log)")
+    ax.set_title(f"BENCH_{section} trajectories "
+                 f"(x = run under a different backend than {latest_backend!r})")
+    ax.legend(fontsize=6, ncol=2, loc="upper left", framealpha=0.6)
+    fig.tight_layout()
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"PLOT_{section}.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path
+
+
+def render_metric_png(
+    name: str, points: list[tuple[int, float, str]], out_dir: str
+) -> str | None:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    fig, ax = plt.subplots(figsize=(7, 4))
+    (line,) = ax.plot([i for i, _, _ in points], [v for _, v, _ in points],
+                      marker="o", linewidth=1.2)
+    # same rule as the section plots: points recorded under a different
+    # backend than the latest run are not comparable — ring them
+    latest_backend = points[-1][2]
+    off = [(i, v) for i, v, b in points if b != latest_backend]
+    if off:
+        ax.plot([i for i, _ in off], [v for _, v in off], "x",
+                color=line.get_color(), markersize=8)
+    ax.set_xlabel("bench run")
+    ax.set_ylabel(name.split(":")[-1])
+    ax.set_title(f"{name}"
+                 + (f" (x = backend ≠ {latest_backend!r})" if off else ""))
+    fig.tight_layout()
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"PLOT_{name.replace(':', '_').replace('/', '-')}.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default=DEFAULT_RESULTS)
+    ap.add_argument("--out", default=None,
+                    help="plot dir (default <results-dir>/plots)")
+    ap.add_argument("--section", default=None, help="one section only")
+    ap.add_argument("--metric", default=None,
+                    help="plot one derived metric: <section>:<row>:<key>")
+    ap.add_argument("--ascii", action="store_true",
+                    help="sparkline tables on stdout, no matplotlib")
+    args = ap.parse_args(argv)
+    out_dir = args.out or os.path.join(args.results_dir, "plots")
+
+    sections = load_sections(args.results_dir)
+    if args.section:
+        sections = {k: v for k, v in sections.items() if k == args.section}
+    if not sections:
+        print(f"no BENCH_*.json trajectories under {args.results_dir}",
+              file=sys.stderr)
+        return 1
+
+    if args.metric:
+        section, row, key = args.metric.split(":", 2)
+        history = sections.get(section)
+        if history is None:
+            print(f"unknown section {section!r}", file=sys.stderr)
+            return 1
+        points = metric_trajectory(history, row, key)
+        if not points:
+            print(f"metric {args.metric!r} absent from every run", file=sys.stderr)
+            return 1
+        vals = [v for _, v, _ in points]
+        mixed = len({b for _, _, b in points}) > 1
+        print(f"{args.metric}: {sparkline(vals)} "
+              f"last={points[-1][1]:g} over {len(points)} run(s)"
+              + ("  [mixed backends — points are not comparable]" if mixed else ""))
+        if not args.ascii:
+            path = render_metric_png(args.metric, points, out_dir)
+            if path:
+                print(f"wrote {path}")
+        return 0
+
+    wrote = 0
+    for section, history in sorted(sections.items()):
+        if args.ascii:
+            render_ascii(section, history)
+            continue
+        path = render_png(section, history, out_dir)
+        if path:
+            print(f"wrote {path}")
+            wrote += 1
+        else:
+            render_ascii(section, history)  # matplotlib missing / no data
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
