@@ -1,11 +1,22 @@
-"""Paper Table 1 (runtime) + Table 2 (precision) analogs.
+"""Paper Table 1 (runtime) + Table 2 (precision) analogs, plus the
+offline-phase build-time section (``index_build`` trajectory).
 
 Runtime of top-k n-ary discovery per hash function / hash size, and
 macro-averaged precision (mean ± std over queries), on the synthetic lake
 calibrated to webtable statistics (power-law widths, ~12 PL items/value).
+
+``--only index_build`` runs just the build section (what CI's bench job
+gates through ``tools/check_bench.py``): single-host build time with
+structural metrics (values/bytes hashed are seed-deterministic, gated
+exactly) and a host-sharded build asserting byte-identity to the
+single-host artifacts, with the merge-cost fraction gated so the shard
+merge can never quietly grow superlinear.
 """
 
 from __future__ import annotations
+
+import argparse
+import time
 
 from benchmarks import common
 
@@ -103,6 +114,62 @@ def table_engines():
     return out
 
 
+def index_build():
+    """Offline phase (§4/§5) build-time rows — the ``index_build`` section.
+
+    The sharded row uses the host-sharded path (4 shards, no device mesh):
+    the same hash work plus the shard-merge bookkeeping, so
+    ``sharded_vs_single`` isolates the merge/bookkeeping overhead and
+    ``identical`` pins the byte-identity contract on every bench run.
+    """
+    from repro.core import xash
+    from repro.core.index import build_index, index_artifacts_equal
+
+    print("# index_build: offline-phase build time (single-host vs sharded merge)")
+    c = common.corpus()
+    cfg = xash.XashConfig(
+        bits=128, char_freq=tuple(c.char_frequencies().tolist())
+    )
+    # warm the jit caches of both paths so the rows measure steady-state
+    # hashing, not compile time (shard shapes differ from the single pass)
+    build_index(c, cfg=cfg)
+    build_index(c, cfg=cfg, n_shards=4)
+
+    t0 = time.perf_counter()
+    ref, st1 = build_index(c, cfg=cfg)
+    dt_single = time.perf_counter() - t0
+    common.emit(
+        "build/xash(128)", dt_single * 1e6,
+        f"values={st1.values_total};bytes_hashed={st1.bytes_hashed};"
+        f"rows={st1.rows_total};"
+        f"hash_frac={st1.hash_seconds / max(st1.total_seconds, 1e-9):.3f}",
+    )
+    t0 = time.perf_counter()
+    idx4, st4 = build_index(c, cfg=cfg, n_shards=4)
+    dt_sharded = time.perf_counter() - t0
+    identical = index_artifacts_equal(idx4, ref)
+    common.emit(
+        "build/sharded_host(4)", dt_sharded * 1e6,
+        f"identical={identical};"
+        f"sharded_vs_single={dt_sharded / max(dt_single, 1e-9):.2f}x;"
+        f"merge_frac={st4.merge_seconds / max(st4.total_seconds, 1e-9):.4f};"
+        f"shards={st4.n_shards}",
+    )
+    if ENGINE_512:
+        cfg512 = xash.XashConfig(
+            bits=512, char_freq=tuple(c.char_frequencies().tolist())
+        )
+        build_index(c, cfg=cfg512)  # warm
+        t0 = time.perf_counter()
+        _idx, st = build_index(c, cfg=cfg512)
+        dt = time.perf_counter() - t0
+        common.emit(
+            "build/xash(512)", dt * 1e6,
+            f"values={st.values_total};bytes_hashed={st.bytes_hashed};"
+            f"vs_128={dt / max(dt_single, 1e-9):.2f}x",
+        )
+
+
 def table2_precision():
     print("# Table 2 analog: precision mean±std")
     for gname, n_rows in common.ROWS.items():
@@ -117,7 +184,18 @@ def table2_precision():
                 )
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default=None, choices=["index_build"],
+        help="run a single section (CI's bench job gates index_build "
+             "without paying for the full table sweep)",
+    )
+    args = ap.parse_args(argv)
+    index_build()
+    common.save_trajectory("index_build")
+    if args.only == "index_build":
+        return
     table1_runtime()
     table_engines()
     table2_precision()

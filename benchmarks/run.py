@@ -50,7 +50,7 @@ def main() -> None:
     # announce it up front so a pasted CSV is self-describing too
     print(f"# filter_backend={common.resolved_backend()} (registry-resolved)")
     print("name,us_per_call,derived")
-    section("tables", bench_tables.main)
+    section("tables", lambda: bench_tables.main([]))
     section("figures", bench_figures.main)
     section("kernels", bench_kernels.main)
     # the width sweep exists to build 512-bit indexes — skipped entirely in

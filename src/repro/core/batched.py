@@ -62,7 +62,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import warnings
 from collections import defaultdict
 
 import numpy as np
@@ -75,54 +74,6 @@ from repro.kernels import ops, registry
 from repro.kernels.registry import Backend
 
 DEFAULT_BATCH_TABLES = 256
-
-# sentinel distinguishing "kwarg not passed" from an explicit None/False on
-# the deprecated use_kernel=/fused= flags (both carried meaning)
-_UNSET = object()
-
-
-def resolve_engine_backend(
-    backend: Backend | str | None = None,
-    use_kernel=_UNSET,
-    fused=_UNSET,
-    caller: str = "discover_batched",
-) -> Backend:
-    """One resolved ``Backend`` per engine call — including the deprecation
-    mapping from the pre-registry ``use_kernel=``/``fused=`` booleans.
-
-    The legacy flags warn and translate to the exact backend the old
-    dispatch would have taken (results stay bit-identical):
-
-      * ``use_kernel=False``            -> 'numpy' (host oracle), beats fused
-      * ``fused=True``                  -> 'fused'
-      * ``fused=False`` under a fused
-        default (env var / TPU)         -> 'pallas' (the composed pin)
-      * ``fused=None`` / flags unset    -> registry resolution
-    """
-    if use_kernel is _UNSET and fused is _UNSET:
-        return registry.resolve_backend(backend)
-    if backend is not None:
-        raise TypeError(
-            f"{caller}: pass either backend= or the deprecated "
-            "use_kernel=/fused= flags, not both"
-        )
-    warnings.warn(
-        f"{caller}(use_kernel=..., fused=...) is deprecated; pass "
-        "backend= (a kernels.registry.Backend or registered name) or use "
-        "core.session.MateSession",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-    use_kernel = True if use_kernel is _UNSET else use_kernel
-    fused = None if fused is _UNSET else fused
-    if not use_kernel:
-        return Backend("numpy")
-    if fused is True:
-        return Backend("fused")
-    resolved = registry.resolve_backend(None)
-    if fused is False and resolved.fused:
-        return Backend("pallas")  # explicit fused=False pins the composed path
-    return resolved
 
 
 @dataclasses.dataclass
@@ -351,8 +302,6 @@ def discover_batched(
     *,
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
-    use_kernel=_UNSET,
-    fused=_UNSET,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
 
@@ -368,10 +317,13 @@ def discover_batched(
     default (fused on TPU, size-based auto split elsewhere).  On 'fused' the
     match matrix is never materialised — not even in HBM — so
     ``stats.filter_matrix_bytes`` stays 0 and surviving tables' slices are
-    recomputed on demand.  ``use_kernel=``/``fused=`` are deprecated shims
-    mapped by ``resolve_engine_backend`` (bit-identical results).
+    recomputed on demand.  The pre-registry ``use_kernel=``/``fused=`` shims
+    were removed after their one-release deprecation window (PR 4): passing
+    them raises TypeError; pin the path with ``backend=`` instead
+    (``use_kernel=False`` -> 'numpy', ``fused=True`` -> 'fused',
+    ``fused=False`` -> 'pallas').
     """
-    bk = resolve_engine_backend(backend, use_kernel, fused, "discover_batched")
+    bk = registry.resolve_backend(backend)
     plan = plan_query(index, query, q_cols, init_mode)
     stats, block = plan.stats, plan.block
     topk = _TopK(k)
@@ -446,8 +398,6 @@ def discover_many(
     *,
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
-    use_kernel=_UNSET,
-    fused=_UNSET,
 ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
     """Multi-query discovery sharing ONE filter launch.
 
@@ -456,8 +406,8 @@ def discover_many(
     scored with the same rule-1/rule-2 + heap semantics, so each request's
     top-k is bit-identical to its solo ``discover``/``discover_batched`` run.
 
-    ``backend`` resolves exactly as in ``discover_batched``
-    (``use_kernel=``/``fused=`` are the same deprecated shims).  A 'fused'
+    ``backend`` resolves exactly as in ``discover_batched`` (and the removed
+    ``use_kernel=``/``fused=`` kwargs raise TypeError here too).  A 'fused'
     backend swaps the group launch for the fused filter+segment-count kernel: the
     (Σ rows × Σ keys) match matrix — the expensive part of the cross-product
     trade below — is never materialised; only the group counts vector comes
@@ -473,7 +423,7 @@ def discover_many(
     groups bounded (``DiscoveryEngine(batch=...)``, default 8) rather than
     fusing unbounded request sets.
     """
-    bk = resolve_engine_backend(backend, use_kernel, fused, "discover_many")
+    bk = registry.resolve_backend(backend)
     ks = [k] * len(queries) if isinstance(k, int) else list(k)
     assert len(ks) == len(queries)
     plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]

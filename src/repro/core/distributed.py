@@ -1,7 +1,15 @@
 """Distributed MATE discovery: corpus sharded over the device mesh.
 
-The filtering layer (the paper's hot loop) is embarrassingly parallel over
-candidate rows, so the natural large-scale layout is:
+Both halves of the system shard the same way.  The ONLINE filtering layer
+(the paper's hot loop) is embarrassingly parallel over candidate rows; the
+OFFLINE build (``core.index.build_index``) is embarrassingly parallel over
+unique values (hashing) and corpus rows (super keys, posting lists).  The
+shard helpers at the bottom of this module (``shard_bounds``,
+``mesh_shard_count``, ``pad_rows_to_shards``, ``shard_map_compat``) are the
+shared vocabulary: contiguous balanced row/value blocks, padded to the mesh
+where device work needs equal shards.
+
+For the online filter the natural large-scale layout is:
 
   * per-row super keys  uint32[n_rows, lanes]   → sharded over ALL mesh axes
     (rows are block-partitioned; a row's table never matters to the filter)
@@ -23,7 +31,6 @@ from __future__ import annotations
 
 import functools
 import inspect
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +44,10 @@ from repro.kernels.registry import Backend
 _shard_map = getattr(jax, "shard_map", None)
 if _shard_map is None:
     from jax.experimental.shard_map import shard_map as _shard_map
+
+# the version-compat shard_map entry shared with the offline build
+# (kernels.ops.xash_values_mesh) — same callable the filter wraps below
+shard_map_compat = _shard_map
 
 
 def _no_rep_check_kwargs() -> dict:
@@ -153,10 +164,6 @@ _FILTER_IMPLS = {
     "fused": filter_counts_local_fused,
 }
 
-# deprecated-impl sentinel: distinguishes "not passed" from an explicit value
-_UNSET = object()
-
-
 def shard_impl_for(backend: Backend | str | None) -> str:
     """Map a resolved filter ``Backend`` onto a per-shard impl name.
 
@@ -179,7 +186,6 @@ def make_distributed_filter(
     n_tables: int,
     row_axes: tuple[str, ...],
     backend: Backend | str | None = None,
-    impl=_UNSET,
 ):
     """jit'd (superkeys, row_tables, query_sks) -> (table_counts, key_counts)
     with rows sharded over ``row_axes`` and outputs replicated (psum).
@@ -188,18 +194,9 @@ def make_distributed_filter(
     name, or a shard-impl name: 'broadcast' (baseline) | 'blocked'
     (lane-unrolled streaming) | 'fused' (single Pallas filter+segment-count
     launch per shard).  None resolves via the registry (env var, then
-    platform default).  ``impl=`` is the deprecated pre-registry spelling.
+    platform default).  The pre-registry ``impl=`` kwarg was removed after
+    its one-release deprecation window (PR 4): passing it raises TypeError.
     """
-    if impl is not _UNSET:
-        warnings.warn(
-            "make_distributed_filter(impl=...) is deprecated; pass backend= "
-            "(a shard-impl name or kernels.registry Backend)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if backend is not None:
-            raise TypeError("pass either backend= or the deprecated impl=, not both")
-        backend = impl
     impl = shard_impl_for(backend)
     local = _FILTER_IMPLS[impl]
     extra = _no_rep_check_kwargs() if impl == "fused" else {}
@@ -220,6 +217,43 @@ def make_distributed_filter(
     return jax.jit(_sharded)
 
 
+# ---------------------------------------------------------------------------
+# Shard helpers shared by the online filter and the offline index build
+# ---------------------------------------------------------------------------
+
+
+def mesh_shard_count(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    """Number of shards a block-partition over ``axes`` produces."""
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def shard_bounds(n: int, n_shards: int) -> np.ndarray:
+    """int64[n_shards+1] contiguous balanced shard boundaries over ``n``
+    items: shard ``i`` covers ``[bounds[i], bounds[i+1])``.
+
+    Prefix shards take ``ceil(n / n_shards)`` items, trailing shards may be
+    short or empty — the SAME contiguous-ascending layout a padded equal-size
+    device partition induces, which is what makes the offline build's
+    shard-merge order-preserving (shard outputs concatenate back into global
+    row/value order).
+    """
+    size = -(-n // n_shards) if n else 0
+    return np.minimum(
+        np.arange(n_shards + 1, dtype=np.int64) * size, np.int64(n)
+    )
+
+
+def pad_rows_to_shards(x: np.ndarray, n_shards: int, value=0) -> np.ndarray:
+    """Pad the leading dim up to an equal-shard multiple (≥ 1 row/shard)."""
+    n = x.shape[0]
+    target = max(-(-n // n_shards) * n_shards, n_shards)
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[0] = (0, target - n)
+    return np.pad(x, pads, constant_values=value)
+
+
 def shard_corpus_rows(
     superkeys: np.ndarray,
     row_tables: np.ndarray,
@@ -231,13 +265,11 @@ def shard_corpus_rows(
     Re-invoking with a different mesh is the elastic-scaling path: arrays are
     repartitioned from the host copy (or via d2d reshard when alive).
     """
-    n_shards = int(np.prod([mesh.shape[a] for a in row_axes]))
-    n = superkeys.shape[0]
-    target = -(-n // n_shards) * n_shards
-    sk = np.zeros((target, superkeys.shape[1]), dtype=np.uint32)
-    sk[:n] = superkeys
-    rt = np.full((target,), -1, dtype=np.int32)
-    rt[:n] = row_tables
+    n_shards = mesh_shard_count(mesh, row_axes)
+    sk = pad_rows_to_shards(np.asarray(superkeys, dtype=np.uint32), n_shards)
+    rt = pad_rows_to_shards(
+        np.asarray(row_tables, dtype=np.int32), n_shards, value=-1
+    )
     sharding = NamedSharding(mesh, P(row_axes))
     return (
         jax.device_put(sk, sharding),

@@ -10,8 +10,19 @@ baselines (computed per unique value, cached).  Per-unique-value hashing plus
 an id-arena makes index build O(unique values) hash work instead of
 O(total cells) — same trick the paper's artifact uses.
 
+The offline phase itself is SHARDABLE (``build_index``): unique-value
+hashing runs under ``shard_map`` over a device mesh
+(``kernels.ops.xash_values_mesh``) while super-key aggregation and
+posting-list construction run per contiguous row shard with a host-side
+merge (``merge_shard_postings``) — every artifact (``value_lanes``,
+``superkeys``, posting lists, CSR offsets) is BYTE-IDENTICAL to the
+single-host ``MateIndex(...)`` constructor at any shard/device count.
+``BuildStats`` records the per-phase accounting.
+
 Index updates (§5.4): ``insert_table`` appends rows/postings/super keys;
 ``delete_table`` tombstones; ``update_cell`` re-hashes the affected row.
+They operate on the merged dict/array state, so they compose identically
+with sharded- and single-host-built indexes.
 
 Columnar accessors for the batched online engine (``gather_candidates``,
 ``superkey_of_keys``, ``superkey_of_rows``) expose the index as contiguous
@@ -23,6 +34,7 @@ as a single kernel launch with no per-row dict lookups.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -30,6 +42,23 @@ from repro.core import encoding, hashes, xash
 from repro.core.corpus import Corpus, Table
 
 _XASH_CHUNK = 1 << 15
+
+
+def _resolve_cfg(
+    corpus: Corpus, cfg: xash.XashConfig, hash_name: str,
+    use_corpus_char_freq: bool,
+) -> xash.XashConfig:
+    """Apply the corpus-level char-frequency prior (§5.2.1) when asked.
+
+    replace() keeps every other knob (bits/width, ablation flags) of the
+    caller's config intact.  Shared by the single-host constructor and the
+    sharded builder so both resolve the SAME effective config.
+    """
+    if use_corpus_char_freq and hash_name == "xash":
+        cfg = dataclasses.replace(
+            cfg, char_freq=tuple(corpus.char_frequencies().tolist())
+        )
+    return cfg
 
 
 def _hash_unique_values(
@@ -75,6 +104,111 @@ def _aggregate_superkeys(
     return sk
 
 
+# ---------------------------------------------------------------------------
+# Posting-list construction (sharded unit + host-side merge)
+# ---------------------------------------------------------------------------
+
+
+def _shard_postings(
+    cell_value_ids: np.ndarray, row_lo: int, row_hi: int, n_values: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Posting-list items of rows ``[row_lo, row_hi)`` in mergeable form.
+
+    Returns ``(payload, counts)``: ``payload`` int64[m, 2] of
+    (global_row, col) grouped by ascending value id — row-major within a
+    value id, the PL order the scalar engine fetches — and ``counts``
+    int64[n_values] items per value id.  One call over the full row range is
+    exactly the single-host build; per-shard calls merge via
+    ``merge_shard_postings``.
+    """
+    ids = cell_value_ids[row_lo:row_hi]
+    rows_idx, cols_idx = np.nonzero(ids >= 0)
+    vids = ids[rows_idx, cols_idx]
+    order = np.argsort(vids, kind="stable")
+    payload = np.stack(
+        [rows_idx[order] + row_lo, cols_idx[order]], axis=1
+    ).astype(np.int64)
+    counts = np.bincount(vids, minlength=n_values).astype(np.int64)
+    return payload, counts
+
+
+def _csr_ptr(counts: np.ndarray) -> np.ndarray:
+    ptr = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return ptr
+
+
+def merge_shard_postings(
+    payloads: list[np.ndarray], counts: list[np.ndarray], n_values: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Merge per-shard posting payloads into the global CSR layout.
+
+    Shards cover contiguous ascending row ranges, so placing each shard's
+    per-vid group after the previous shards' groups reproduces the global
+    row-major order within every value id — the merged ``(payload, ptr)`` is
+    byte-identical to a single-host ``_shard_postings`` over all rows.
+    """
+    total = (
+        np.sum(np.stack(counts), axis=0)
+        if counts
+        else np.zeros(n_values, dtype=np.int64)
+    )
+    ptr = _csr_ptr(total)
+    payload = np.empty((int(ptr[-1]), 2), dtype=np.int64)
+    write_at = ptr[:-1].copy()  # next free slot per value id
+    for pl, cnt in zip(payloads, counts):
+        if not len(pl):
+            continue
+        group_start = np.cumsum(cnt) - cnt  # this shard's per-vid offsets
+        within = np.arange(len(pl), dtype=np.int64) - np.repeat(group_start, cnt)
+        payload[np.repeat(write_at, cnt) + within] = pl
+        write_at += cnt
+    return payload, ptr
+
+
+def _postings_dict(payload: np.ndarray, ptr: np.ndarray) -> dict[int, np.ndarray]:
+    """Explode a CSR posting store into the per-value dict the index serves
+    (entries are views into ``payload``; §5.4 mutations replace them with
+    fresh arrays, never write through)."""
+    postings: dict[int, np.ndarray] = {}
+    for vid in range(len(ptr) - 1):
+        lo, hi = int(ptr[vid]), int(ptr[vid + 1])
+        if hi > lo:
+            postings[vid] = payload[lo:hi]
+    return postings
+
+
+@dataclasses.dataclass
+class BuildStats:
+    """Offline-phase accounting for one ``build_index`` run.
+
+    ``shard_values`` / ``shard_rows`` are the balanced contiguous partitions
+    the build used (values for the hash pass, corpus rows for super keys and
+    postings).  ``shard_hash_seconds`` is per-shard hash wall time: measured
+    per shard on the host-sharded path; on the mesh path every launch is an
+    SPMD collective, so each shard's entry is the per-launch total it
+    participated in (lockstep by construction).
+    """
+
+    n_shards: int = 1
+    mesh_shape: dict[str, int] | None = None  # None: no device mesh
+    values_total: int = 0
+    rows_total: int = 0
+    bytes_hashed: int = 0  # encoded bytes fed to the unique-value hash pass
+    shard_values: list[int] = dataclasses.field(default_factory=list)
+    shard_rows: list[int] = dataclasses.field(default_factory=list)
+    shard_hash_seconds: list[float] = dataclasses.field(default_factory=list)
+    hash_seconds: float = 0.0
+    superkey_seconds: float = 0.0
+    postings_seconds: float = 0.0
+    merge_seconds: float = 0.0
+    total_seconds: float = 0.0
+
+    @property
+    def sharded(self) -> bool:
+        return self.n_shards > 1
+
+
 @dataclasses.dataclass
 class CandidateBlock:
     """All PL items for a set of query values, concatenated per candidate
@@ -112,12 +246,7 @@ class MateIndex:
         hash_name: str = "xash",
         use_corpus_char_freq: bool = False,
     ):
-        if use_corpus_char_freq and hash_name == "xash":
-            # replace() keeps every other knob (bits/width, ablation flags)
-            # of the caller's config intact.
-            cfg = dataclasses.replace(
-                cfg, char_freq=tuple(corpus.char_frequencies().tolist())
-            )
+        cfg = _resolve_cfg(corpus, cfg, hash_name, use_corpus_char_freq)
         self.corpus = corpus
         self.cfg = cfg
         self.hash_name = hash_name
@@ -133,19 +262,37 @@ class MateIndex:
             corpus.cell_value_ids, self.value_lanes, cfg.lanes
         )
 
-        # posting lists: value id -> int64[n, 2] (global_row, col)
-        self.postings: dict[int, np.ndarray] = {}
-        rows_idx, cols_idx = np.nonzero(corpus.cell_value_ids >= 0)
-        vids = corpus.cell_value_ids[rows_idx, cols_idx]
-        order = np.argsort(vids, kind="stable")
-        vids, rows_idx, cols_idx = vids[order], rows_idx[order], cols_idx[order]
-        bounds = np.searchsorted(vids, np.arange(len(corpus.unique_values) + 1))
-        payload = np.stack([rows_idx, cols_idx], axis=1).astype(np.int64)
-        for vid in range(len(corpus.unique_values)):
-            lo, hi = bounds[vid], bounds[vid + 1]
-            if hi > lo:
-                self.postings[vid] = payload[lo:hi]
+        # posting lists: value id -> int64[n, 2] (global_row, col); one
+        # full-range shard of the same construction the sharded build merges
+        n_values = len(corpus.unique_values)
+        payload, counts = _shard_postings(
+            corpus.cell_value_ids, 0, corpus.total_rows, n_values
+        )
+        self.postings = _postings_dict(payload, _csr_ptr(counts))
         self._deleted_tables: set[int] = set()
+
+    @classmethod
+    def _from_build(
+        cls,
+        corpus: Corpus,
+        cfg: xash.XashConfig,
+        hash_name: str,
+        value_lanes: np.ndarray,
+        superkeys: np.ndarray,
+        payload: np.ndarray,
+        ptr: np.ndarray,
+    ) -> "MateIndex":
+        """Assemble an index from prebuilt (possibly shard-merged) artifacts
+        — the ``build_index`` seam.  ``cfg`` must already be resolved."""
+        self = cls.__new__(cls)
+        self.corpus = corpus
+        self.cfg = cfg
+        self.hash_name = hash_name
+        self.value_lanes = value_lanes
+        self.superkeys = superkeys
+        self.postings = _postings_dict(payload, ptr)
+        self._deleted_tables = set()
+        return self
 
     @property
     def bits(self) -> int:
@@ -340,3 +487,147 @@ class MateIndex:
         self.superkeys[grow] = _aggregate_superkeys(
             corpus.cell_value_ids[grow : grow + 1], self.value_lanes, self.cfg.lanes
         )[0]
+
+
+def index_artifacts_equal(a: "MateIndex", b: "MateIndex") -> bool:
+    """True iff every offline artifact is byte-identical: value hash lanes
+    (incl. dtype), per-row super keys, and per-value posting lists.
+
+    The sharded-build contract's single definition — shared by the
+    ``index_build`` bench gate, the launch dry-run and the equivalence test
+    matrix, so the three can't drift apart on what "identical" means.
+    """
+    return (
+        a.value_lanes.dtype == b.value_lanes.dtype
+        and np.array_equal(a.value_lanes, b.value_lanes)
+        and np.array_equal(a.superkeys, b.superkeys)
+        and set(a.postings) == set(b.postings)
+        and all(
+            a.postings[v].dtype == b.postings[v].dtype
+            and np.array_equal(a.postings[v], b.postings[v])
+            for v in b.postings
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded offline build (the distributed counterpart of ``MateIndex(...)``)
+# ---------------------------------------------------------------------------
+
+
+def build_index(
+    corpus: Corpus,
+    cfg: xash.XashConfig = xash.DEFAULT_CONFIG,
+    hash_name: str = "xash",
+    use_corpus_char_freq: bool = False,
+    *,
+    mesh=None,
+    row_axes: tuple[str, ...] | None = None,
+    n_shards: int | None = None,
+) -> tuple["MateIndex", BuildStats]:
+    """Offline phase (§4/§5) with every pass sharded, plus build accounting.
+
+    With a ``mesh`` of >1 devices, unique-value XASH hashing runs under
+    ``shard_map`` over ``row_axes`` (``kernels.ops.xash_values_mesh``) —
+    the throughput-critical pass, the same way ``core.distributed`` shards
+    the online filter.  Super-key aggregation and posting-list construction
+    run per contiguous row shard on the host and merge deterministically
+    (``merge_shard_postings``).  Without a mesh, ``n_shards`` splits the
+    same passes host-side (shard-merge machinery without devices); the
+    default ``n_shards=1`` IS the single-host path.
+
+    Every path yields artifacts byte-identical to ``MateIndex(corpus, ...)``:
+    per-value hashing has no cross-value term, super keys are per-row, and
+    the posting merge preserves global row-major order within each value id.
+    Baseline hashes (``hash_name != 'xash'``) are host-side Python and fall
+    back to host-sharded hashing under any mesh.
+
+    Returns ``(index, BuildStats)``.
+    """
+    t_start = time.perf_counter()
+    cfg = _resolve_cfg(corpus, cfg, hash_name, use_corpus_char_freq)
+    from repro.core import distributed
+
+    mesh_shards = 0
+    if mesh is not None:
+        row_axes = tuple(row_axes or mesh.axis_names)
+        mesh_shards = distributed.mesh_shard_count(mesh, row_axes)
+        if n_shards is None:
+            n_shards = mesh_shards
+        elif n_shards != mesh_shards:
+            raise ValueError(
+                f"n_shards={n_shards} conflicts with mesh shard count "
+                f"{mesh_shards} over axes {row_axes}"
+            )
+    n_shards = max(int(n_shards or 1), 1)
+    # one device (or one shard) falls back to the single-host pass; baseline
+    # hashes are host-side Python functions, so only xash hashes on device
+    use_mesh = mesh is not None and mesh_shards > 1 and hash_name == "xash"
+
+    n_values = len(corpus.unique_values)
+    stats = BuildStats(
+        n_shards=n_shards,
+        mesh_shape=(
+            {a: int(mesh.shape[a]) for a in row_axes} if use_mesh else None
+        ),
+        values_total=n_values,
+        rows_total=corpus.total_rows,
+        bytes_hashed=int(corpus.unique_enc.size),
+        shard_values=np.diff(distributed.shard_bounds(n_values, n_shards))
+        .astype(int).tolist(),
+    )
+    avg_w = corpus.avg_row_width()
+
+    # -- unique-value hashing (the throughput-critical pass) ----------------
+    t0 = time.perf_counter()
+    if use_mesh:
+        from repro.kernels import ops
+
+        value_lanes = ops.xash_values_mesh(
+            corpus.unique_enc, cfg, mesh=mesh, row_axes=row_axes,
+            times_out=stats.shard_hash_seconds,
+        )
+    else:
+        value_lanes = np.zeros((n_values, cfg.lanes), dtype=np.uint32)
+        vb = distributed.shard_bounds(n_values, n_shards)
+        for i in range(n_shards):
+            lo, hi = int(vb[i]), int(vb[i + 1])
+            ts = time.perf_counter()
+            value_lanes[lo:hi] = _hash_unique_values(
+                corpus.unique_values[lo:hi], corpus.unique_enc[lo:hi], cfg,
+                hash_name, avg_w,
+            )
+            stats.shard_hash_seconds.append(time.perf_counter() - ts)
+    stats.hash_seconds = time.perf_counter() - t0
+
+    # -- per-row-shard super keys + posting lists ---------------------------
+    rb = distributed.shard_bounds(corpus.total_rows, n_shards)
+    stats.shard_rows = np.diff(rb).astype(int).tolist()
+    t0 = time.perf_counter()
+    sk_parts = [
+        _aggregate_superkeys(
+            corpus.cell_value_ids[int(rb[i]) : int(rb[i + 1])],
+            value_lanes, cfg.lanes,
+        )
+        for i in range(n_shards)
+    ]
+    stats.superkey_seconds = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    parts = [
+        _shard_postings(corpus.cell_value_ids, int(rb[i]), int(rb[i + 1]), n_values)
+        for i in range(n_shards)
+    ]
+    stats.postings_seconds = time.perf_counter() - t0
+
+    # -- host-side merge ----------------------------------------------------
+    t0 = time.perf_counter()
+    superkeys = np.concatenate(sk_parts)
+    payload, ptr = merge_shard_postings(
+        [p for p, _ in parts], [c for _, c in parts], n_values
+    )
+    index = MateIndex._from_build(
+        corpus, cfg, hash_name, value_lanes, superkeys, payload, ptr
+    )
+    stats.merge_seconds = time.perf_counter() - t0
+    stats.total_seconds = time.perf_counter() - t_start
+    return index, stats

@@ -29,10 +29,11 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import batched as batched_lib
+from repro.core import index as index_lib
 from repro.core import xash
 from repro.core.corpus import Corpus, Table
 from repro.core.discovery import DiscoveryStats, TopKEntry
-from repro.core.index import MateIndex
+from repro.core.index import BuildStats, MateIndex
 from repro.kernels import registry
 from repro.kernels.registry import Backend
 
@@ -160,20 +161,43 @@ class MateSession:
         self.config = config
         self.backend = config.resolve_backend()
         self.stats = SessionStats()
+        # set by ``build``; None when wrapping an externally built index
+        self.build_stats: BuildStats | None = None
 
     @classmethod
     def build(
-        cls, corpus: Corpus, config: DiscoveryConfig | None = None
+        cls,
+        corpus: Corpus,
+        config: DiscoveryConfig | None = None,
+        *,
+        mesh=None,
+        row_axes: tuple[str, ...] | None = None,
+        n_shards: int | None = None,
     ) -> "MateSession":
-        """Offline phase (§4/§5): hash + index ``corpus`` per ``config``."""
+        """Offline phase (§4/§5): hash + index ``corpus`` per ``config``.
+
+        ``mesh`` shards the build the way the online filter already shards
+        (``core.index.build_index``): unique-value hashing under
+        ``shard_map`` over ``row_axes`` (default: all mesh axes), super keys
+        and posting lists per row shard with a deterministic host-side merge
+        — byte-identical artifacts to the single-host build at any device
+        count.  One device (or no mesh) falls back to the single-host pass;
+        ``n_shards`` optionally splits the host passes without a mesh.
+        Accounting lands in ``session.build_stats`` (a ``BuildStats``).
+        """
         config = config or DiscoveryConfig()
-        index = MateIndex(
+        index, build_stats = index_lib.build_index(
             corpus,
             cfg=xash.XashConfig(bits=config.bits),
             hash_name=config.hash_name,
             use_corpus_char_freq=config.use_corpus_char_freq,
+            mesh=mesh,
+            row_axes=row_axes,
+            n_shards=n_shards,
         )
-        return cls(index, config)
+        session = cls(index, config)
+        session.build_stats = build_stats
+        return session
 
     @property
     def bits(self) -> int:

@@ -70,6 +70,71 @@ def xash_values(
     return superkey(jnp.asarray(enc_values)[:, None, :], cfg, interpret=interpret)
 
 
+# per-shard values per launch: bounds the [chunk, max_len, 37] one-hot
+# intermediate of the vectorised hash, mirroring the single-host chunking
+# (core.index._XASH_CHUNK)
+_MESH_HASH_CHUNK = 1 << 15
+
+
+def xash_values_mesh(
+    enc_values: np.ndarray,
+    cfg: XashConfig = DEFAULT_CONFIG,
+    *,
+    mesh,
+    row_axes: tuple[str, ...] | None = None,
+    chunk: int = _MESH_HASH_CHUNK,
+    times_out: list | None = None,
+) -> np.ndarray:
+    """Mesh-sharded unique-value XASH: uint8[n, max_len] -> uint32[n, lanes].
+
+    The offline build's throughput-critical pass: values are block-partitioned
+    over ``row_axes`` and hashed under ``shard_map`` by the SAME vectorised
+    ``core.xash.xash`` the single-host ``MateIndex`` build runs.  Per-value
+    hashing has no cross-value term and is pure integer arithmetic, so the
+    gathered shard outputs are BIT-IDENTICAL to the single-host pass at any
+    device count — the invariant ``tests/test_sharded_build.py`` pins.
+
+    ``chunk`` bounds values-per-shard-per-launch (device memory, see
+    ``_MESH_HASH_CHUNK``); padding values hash to all-zero lanes and are
+    sliced off.  ``times_out`` (optional list) receives per-launch wall
+    seconds for ``BuildStats`` accounting — launches are SPMD-collective, so
+    every shard participates in every entry.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import distributed
+    from repro.core import xash as xash_lib
+
+    row_axes = tuple(row_axes or mesh.axis_names)
+    n_shards = distributed.mesh_shard_count(mesh, row_axes)
+    n = enc_values.shape[0]
+    out = np.zeros((n, cfg.lanes), dtype=np.uint32)
+    if n == 0:
+        return out
+    sharding = NamedSharding(mesh, P(row_axes))
+    hash_fn = jax.jit(
+        distributed.shard_map_compat(
+            lambda e: xash_lib.xash(e, cfg),
+            mesh=mesh,
+            in_specs=P(row_axes),
+            out_specs=P(row_axes),
+        )
+    )
+    import time as _time
+
+    step = chunk * n_shards
+    for s in range(0, n, step):
+        block = np.asarray(enc_values[s : s + step])
+        nb = block.shape[0]
+        block = distributed.pad_rows_to_shards(block, n_shards)
+        t0 = _time.perf_counter()
+        lanes = np.asarray(hash_fn(jax.device_put(block, sharding)))
+        if times_out is not None:
+            times_out.append(_time.perf_counter() - t0)
+        out[s : s + nb] = lanes[:nb]
+    return out
+
+
 def flash_attention(
     q: jnp.ndarray,  # [B, S, H, d]
     k: jnp.ndarray,  # [B, T, H, d]

@@ -14,11 +14,18 @@ platform default); omitted, the session resolves it per that rule.
 
 ``--mesh dxm`` additionally runs the shard_map-distributed filter to show
 the corpus-sharded layout (1x1 on CPU; 16x16 on a real pod).
+
+``--build-mesh N`` shards the OFFLINE phase the same way: the session builds
+over an N-device mesh (``MateSession.build(..., mesh=...)`` — unique-value
+hashing under shard_map, host-side posting merge), forcing N virtual CPU
+devices for a dry run when the host has fewer.  The build is byte-identical
+to the single-host pass; the driver prints the ``BuildStats`` breakdown.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -51,8 +58,22 @@ def main(argv=None):
     ap.add_argument("--flush-after", type=float, default=None,
                     help="serving deadline (s) for partial DiscoveryEngine groups")
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--build-mesh", type=int, default=1, metavar="N",
+                    help="shard the offline index build over an N-device mesh "
+                         "(forces N virtual CPU devices when the host has "
+                         "fewer and jax is not yet initialised)")
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args(argv)
+
+    if args.build_mesh > 1:
+        # must win the race with the first jax backend init; harmless if the
+        # backend is already up — the mesh is clamped to visible devices below
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.build_mesh}"
+            ).strip()
 
     print(f"[mate] building corpus ({args.n_tables} tables) ...")
     corpus = synthetic.make_corpus(
@@ -62,14 +83,33 @@ def main(argv=None):
         bits=args.bits, k=args.k, backend=args.backend, hash_name=args.hash,
         flush_after=args.flush_after,
     )
+    build_mesh = None
+    if args.build_mesh > 1:
+        n_dev = min(args.build_mesh, len(jax.devices()))
+        if n_dev < args.build_mesh:
+            print(
+                f"[mate] --build-mesh {args.build_mesh}: only "
+                f"{len(jax.devices())} devices visible (jax already "
+                f"initialised?), building on {n_dev}"
+            )
+        build_mesh = meshlib.make_mesh((n_dev,), ("data",))
     t0 = time.time()
-    session = MateSession.build(corpus, config)
+    session = MateSession.build(corpus, config, mesh=build_mesh)
     index = session.index
     print(
         f"[mate] offline phase: indexed {corpus.total_rows} rows, "
         f"{len(corpus.unique_values)} unique values in {time.time()-t0:.2f}s "
         f"(hash={args.hash}, bits={session.bits}, lanes={index.cfg.lanes}, "
         f"backend={session.backend.name}[{session.backend.source}])"
+    )
+    bs = session.build_stats
+    print(
+        f"[mate] build stats: shards={bs.n_shards}"
+        f"{'' if bs.mesh_shape is None else f' mesh={bs.mesh_shape}'} "
+        f"hash={bs.hash_seconds:.2f}s superkeys={bs.superkey_seconds:.2f}s "
+        f"postings={bs.postings_seconds:.2f}s merge={bs.merge_seconds:.3f}s "
+        f"({bs.bytes_hashed} bytes hashed over "
+        f"{bs.values_total} unique values)"
     )
 
     queries = synthetic.make_mixed_queries(

@@ -2,7 +2,8 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Dry-run for the paper's own workload: the distributed super-key filter.
+"""Dry-run for the paper's own workload: the distributed super-key filter
+AND the sharded offline index build.
 
 Lowers the corpus-sharded subsumption filter (rows over all mesh axes,
 queries replicated, per-table psum) for DWTC-scale inputs and records the
@@ -10,6 +11,13 @@ same JSON schema as the LM cells, so benchmarks/roofline.py includes
 'mate-filter' rows.  Run after (or alongside) repro.launch.dryrun:
 
     PYTHONPATH=src python -m repro.launch.dryrun_mate [--impl blocked]
+
+``--build-shards N`` (default 8, 0 disables) additionally exercises the
+sharded OFFLINE phase end-to-end on N of the virtual devices: a real (small)
+corpus is built through ``MateSession.build(..., mesh=...)`` — unique-value
+hashing under shard_map, host-side posting merge — and verified
+byte-identical to the single-host build, so the launch smoke path covers
+the offline half of the distributed architecture too.
 """
 
 import argparse
@@ -93,11 +101,44 @@ def lower(shape_name: str, multi_pod: bool, impl: str):
     }
 
 
+def exercise_sharded_build(n_shards: int) -> None:
+    """Real (non-dry) sharded offline build on virtual devices, through the
+    ``MateSession.build(..., mesh=...)`` surface, verified byte-identical to
+    the single-host pass."""
+    from repro.core import xash
+    from repro.core.index import MateIndex, index_artifacts_equal
+    from repro.core.session import DiscoveryConfig, MateSession
+    from repro.data import synthetic
+
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=60, seed=7))
+    mesh = meshlib.make_mesh((n_shards,), ("data",))
+    t0 = time.time()
+    session = MateSession.build(corpus, DiscoveryConfig(bits=128), mesh=mesh)
+    stats = session.build_stats
+    ref = MateIndex(
+        corpus, cfg=xash.XashConfig(bits=128), use_corpus_char_freq=True
+    )
+    identical = index_artifacts_equal(session.index, ref)
+    print(
+        f"[build] sharded offline build on {n_shards} devices: "
+        f"{stats.values_total} unique values, {stats.bytes_hashed} bytes "
+        f"hashed, hash={stats.hash_seconds:.2f}s merge={stats.merge_seconds:.3f}s "
+        f"({time.time()-t0:.1f}s total) identical_to_single_host={identical}",
+        flush=True,
+    )
+    assert identical, "sharded build diverged from the single-host pass"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default=None, choices=[None, "broadcast", "blocked"])
     ap.add_argument("--shape", default="filter_1g")
+    ap.add_argument("--build-shards", type=int, default=8,
+                    help="also run the sharded index build on this many "
+                         "virtual devices (0 disables)")
     args = ap.parse_args()
+    if args.build_shards:
+        exercise_sharded_build(args.build_shards)
     impls = [args.impl] if args.impl else ["broadcast", "blocked"]
     out_dir = os.path.abspath(RESULTS_DIR)
     os.makedirs(out_dir, exist_ok=True)

@@ -36,7 +36,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batched as batched_lib
 from repro.core.corpus import Table
 from repro.core.discovery import DiscoveryStats, TopKEntry
 from repro.core.index import MateIndex
@@ -74,8 +73,9 @@ class DiscoveryEngine:
     Construction: pass a ``MateSession`` (preferred — the engine adopts its
     config's ``window``/``flush_after``), or a bare ``MateIndex`` plus an
     optional ``DiscoveryConfig``.  The engine serves whatever hash width and
-    backend the session resolved; ``use_kernel=``/``fused=`` are deprecated
-    shims translated by ``core.batched.resolve_engine_backend``.
+    backend the session resolved; the pre-registry ``use_kernel=``/``fused=``
+    flags were removed after their one-release deprecation window (PR 4) —
+    pin the backend via ``DiscoveryConfig(backend=...)``.
 
     Scheduling: ``submit`` queues a request (its ``k`` may differ per
     request; None takes the config default).  ``pump(now)`` — the unit a
@@ -90,8 +90,6 @@ class DiscoveryEngine:
         self,
         index: MateIndex | MateSession | None = None,
         batch: int | None = None,
-        use_kernel=batched_lib._UNSET,
-        fused=batched_lib._UNSET,
         *,
         session: MateSession | None = None,
         config: DiscoveryConfig | None = None,
@@ -100,37 +98,12 @@ class DiscoveryEngine:
     ):
         if isinstance(index, MateSession):
             session, index = index, None
-        legacy_flags = (
-            use_kernel is not batched_lib._UNSET
-            or fused is not batched_lib._UNSET
-        )
         if session is None:
             if index is None:
                 raise TypeError("DiscoveryEngine needs a MateSession or a MateIndex")
-            if legacy_flags and config is not None and config.backend is not None:
-                raise TypeError(
-                    "pass either DiscoveryConfig(backend=...) or the "
-                    "deprecated use_kernel=/fused= flags, not both"
-                )
             session = MateSession(index, config)
-            if legacy_flags:
-                # legacy backend flags: warn once here, then pin the freshly
-                # built (engine-private) session to the exact backend the old
-                # dispatch would have taken.
-                session.backend = batched_lib.resolve_engine_backend(
-                    None, use_kernel, fused, "DiscoveryEngine"
-                )
-        else:
-            if index is not None or config is not None:
-                raise TypeError("pass either session= or index/config, not both")
-            if legacy_flags:
-                # a shared session's backend is resolved ONCE at construction;
-                # rewriting it here would silently change dispatch for every
-                # other holder of the session.
-                raise TypeError(
-                    "use_kernel=/fused= cannot modify an existing session — "
-                    "build the MateSession with DiscoveryConfig(backend=...)"
-                )
+        elif index is not None or config is not None:
+            raise TypeError("pass either session= or index/config, not both")
         self.session = session
         self.batch = batch if batch is not None else session.config.window
         self.flush_after = (

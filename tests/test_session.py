@@ -2,11 +2,11 @@
 
 The redesign's contract (ISSUE 4): ``MateSession.discover``/``discover_many``
 top-k results are bit-identical to the pre-redesign entry points across
-widths 128/256/512 and all backends (numpy/xla/pallas/fused); the old
-``use_kernel=``/``fused=``/``impl=`` kwargs keep working for one release via
-deprecation shims with bit-identical results; and the engine's
-arrival-window batching honours window-full and flush-after-deadline
-semantics deterministically.
+widths 128/256/512 and all backends (numpy/xla/pallas/fused); and the
+engine's arrival-window batching honours window-full and
+flush-after-deadline semantics deterministically.  The PR 4 deprecation
+shims (``use_kernel=``/``fused=``/``impl=``) were REMOVED one release later
+(ISSUE 5): the old kwargs now raise TypeError — pinned below.
 """
 
 import asyncio
@@ -90,6 +90,18 @@ def test_session_adopts_index_ground_truth(lake):
     assert session.bits == 256 and session.config.bits == 256
 
 
+def test_session_build_records_build_stats(sessions):
+    """MateSession.build carries the offline-phase BuildStats; wrapping an
+    externally built index does not invent one."""
+    s = sessions[128]
+    assert s.build_stats is not None
+    assert s.build_stats.n_shards == 1 and not s.build_stats.sharded
+    assert s.build_stats.values_total == len(s.index.corpus.unique_values)
+    assert s.build_stats.bytes_hashed == s.index.corpus.unique_enc.size
+    assert s.build_stats.total_seconds > 0
+    assert MateSession(s.index).build_stats is None
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: bit-identity across widths × backends
 # ---------------------------------------------------------------------------
@@ -156,95 +168,52 @@ def test_session_fused_block_n_override(sessions, lake):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: old kwargs warn AND stay bit-identical
+# Deprecation REMOVAL: the PR 4 shims are gone — old kwargs raise TypeError
 # ---------------------------------------------------------------------------
 
-def test_shim_use_kernel_false(sessions, lake):
+def test_removed_use_kernel_kwarg_raises(sessions, lake):
     _corpus, query, q_cols = lake
     index = sessions[128].index
-    new, _ = MateSession(index, DiscoveryConfig(backend="numpy")).discover(
-        query, q_cols, k=10
-    )
-    with pytest.deprecated_call():
-        old, _ = discover_batched(index, query, q_cols, k=10, use_kernel=False)
-    assert _key(old) == _key(new)
-
-
-def test_shim_fused_true(sessions, lake):
-    _corpus, query, q_cols = lake
-    index = sessions[128].index
-    new, new_st = MateSession(index, DiscoveryConfig(backend="fused")).discover(
-        query, q_cols, k=10
-    )
-    with pytest.deprecated_call():
-        old, old_st = discover_batched(index, query, q_cols, k=10, fused=True)
-    assert _key(old) == _key(new)
-    assert old_st.filter_matrix_bytes == new_st.filter_matrix_bytes == 0
-
-
-def test_shim_fused_false_pins_composed(sessions, lake, monkeypatch):
-    """fused=False under a fused env default maps to the composed pallas
-    pin — the PR 3 regression contract, now living in the shim."""
-    _corpus, query, q_cols = lake
-    index = sessions[128].index
-    monkeypatch.setenv("MATE_FILTER_BACKEND", "fused")
-    with pytest.deprecated_call():
-        old, st = discover_batched(index, query, q_cols, k=10, fused=False)
-    assert st.filter_fused_launches == 0
-    assert st.filter_matrix_bytes > 0
+    with pytest.raises(TypeError, match="use_kernel"):
+        discover_batched(index, query, q_cols, k=10, use_kernel=False)
+    # the modern spelling of the old flag
+    got, _ = discover_batched(index, query, q_cols, k=10, backend="numpy")
     ref, _ = discovery.discover(index, query, q_cols, k=10)
-    assert _key(old) == _key(ref)
+    assert _key(got) == _key(ref)
 
 
-def test_shim_discover_many_and_engine(sessions, lake):
+def test_removed_fused_kwarg_raises(sessions, lake):
     _corpus, query, q_cols = lake
     index = sessions[128].index
-    with pytest.deprecated_call():
-        old = discover_many(index, [(query, q_cols)], k=[5], fused=True)
-    new = MateSession(index, DiscoveryConfig(backend="fused")).discover_many(
-        [(query, q_cols)], k=[5]
-    )
-    assert _key(old[0][0]) == _key(new[0][0])
-    with pytest.deprecated_call():
-        eng = DiscoveryEngine(index, batch=2, fused=True)
-    assert eng.backend.name == "fused"
-    req = eng.discover(query, q_cols, k=5)
-    assert _key(req.results) == _key(new[0][0])
+    with pytest.raises(TypeError, match="fused"):
+        discover_batched(index, query, q_cols, k=10, fused=True)
+    with pytest.raises(TypeError, match="fused"):
+        discover_many(index, [(query, q_cols)], k=[5], fused=True)
+    with pytest.raises(TypeError, match="fused"):
+        DiscoveryEngine(index, batch=2, fused=True)
+    with pytest.raises(TypeError, match="use_kernel"):
+        DiscoveryEngine(index, batch=2, use_kernel=False)
 
 
-def test_shim_backend_and_legacy_flags_conflict(sessions, lake):
-    _corpus, query, q_cols = lake
-    index = sessions[128].index
-    with pytest.raises(TypeError, match="not both"):
-        discover_batched(index, query, q_cols, backend="xla", fused=True)
-
-
-def test_shim_distributed_impl(sessions, lake):
+def test_removed_distributed_impl_kwarg_raises(sessions, lake):
     from repro.core import distributed
     import jax
 
-    corpus, query, q_cols = lake
-    index = sessions[128].index
-    _keys, sk_of_key = discovery.build_query_superkeys(index, query, q_cols)
-    qsk = np.stack(list(sk_of_key.values()))
-    row_tables = np.asarray(
-        corpus.table_of_row(np.arange(corpus.total_rows)), dtype=np.int32
-    )
+    corpus, _query, _q_cols = lake
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
-    sk, rt = distributed.shard_corpus_rows(
-        index.superkeys, row_tables, mesh, ("data",)
-    )
-    with pytest.deprecated_call():
-        fn_old = distributed.make_distributed_filter(
+    with pytest.raises(TypeError, match="impl"):
+        distributed.make_distributed_filter(
             mesh, len(corpus.tables), ("data",), impl="blocked"
         )
-    fn_new = distributed.make_distributed_filter(
-        mesh, len(corpus.tables), ("data",), backend="blocked"
-    )
-    tc_old, kc_old = fn_old(sk, rt, qsk)
-    tc_new, kc_new = fn_new(sk, rt, qsk)
-    assert np.array_equal(np.asarray(tc_old), np.asarray(tc_new))
-    assert np.array_equal(np.asarray(kc_old), np.asarray(kc_new))
+
+
+def test_resolve_engine_backend_shim_is_gone():
+    """The legacy-flag translation layer itself was deleted with the shims —
+    backend resolution is kernels.registry only."""
+    from repro.core import batched
+
+    assert not hasattr(batched, "resolve_engine_backend")
+    assert not hasattr(batched, "_UNSET")
 
 
 # ---------------------------------------------------------------------------
@@ -419,18 +388,13 @@ def test_engine_session_and_index_conflict(sessions):
         DiscoveryEngine()
 
 
-def test_engine_legacy_flags_cannot_mutate_shared_session(sessions, lake):
-    """Regression: use_kernel=/fused= must not rewrite a shared session's
-    once-resolved backend; with a private index they conflict with an
-    explicit config backend."""
+def test_engine_removed_legacy_flags_cannot_touch_session(sessions, lake):
+    """The removed use_kernel=/fused= flags raise before they could ever
+    touch a shared session's once-resolved backend."""
     session = MateSession(sessions[128].index, DiscoveryConfig(backend="xla"))
-    with pytest.raises(TypeError, match="cannot modify an existing session"):
+    with pytest.raises(TypeError, match="fused"):
         DiscoveryEngine(session=session, fused=True)
     assert session.backend.name == "xla"  # untouched
-    with pytest.raises(TypeError, match="not both"):
-        DiscoveryEngine(
-            sessions[128].index, config=DiscoveryConfig(backend="xla"), fused=True
-        )
 
 
 def test_enrich_accepts_session(sessions, lake):

@@ -1,0 +1,326 @@
+"""Sharded offline index build: device-count equivalence matrix + merge
+property tests.
+
+The contract (ISSUE 5): ``build_index`` / ``MateSession.build(mesh=...)``
+produce artifacts BYTE-IDENTICAL to the single-host ``MateIndex(...)``
+constructor — ``value_lanes``, posting lists, CSR offsets, super keys — at
+every device count in {1, 2, 4, 8} and every width in {128, 256, 512}, with
+identical ``discover``/``discover_many`` top-k downstream.  The host-sharded
+path (``n_shards`` without a mesh) exercises the same merge machinery on a
+single device, so the property tests run in every CI leg; the mesh matrix
+runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+``sharded-build`` CI leg) and skips where fewer devices are visible.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # property tests skip; the matrix still runs
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    given = settings = _skip_decorator
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+from repro.core import discovery, xash
+from repro.core.corpus import Corpus, Table
+from repro.core.index import (
+    MateIndex,
+    _csr_ptr,
+    _hash_unique_values,
+    _shard_postings,
+    build_index,
+    index_artifacts_equal,
+    merge_shard_postings,
+)
+from repro.core.session import DiscoveryConfig, MateSession
+from repro.data import synthetic
+from repro.launch import mesh as meshlib
+
+N_DEVICES = len(jax.devices())
+DEVICE_COUNTS = (1, 2, 4, 8)
+WIDTHS = (128, 256, 512)
+
+needs_8_devices = pytest.mark.skipif(
+    N_DEVICES < max(DEVICE_COUNTS),
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+    "(the sharded-build CI leg)",
+)
+
+
+@pytest.fixture(scope="module")
+def lake():
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=60, seed=1))
+    query, q_cols, _expected, corpus = synthetic.make_query_with_ground_truth(
+        corpus
+    )
+    return corpus, query, q_cols
+
+
+@pytest.fixture(scope="module")
+def single_host(lake):
+    """Reference single-host indexes, one per width."""
+    corpus, _q, _qc = lake
+    return {
+        bits: MateIndex(
+            corpus, cfg=xash.XashConfig(bits=bits), use_corpus_char_freq=True
+        )
+        for bits in WIDTHS
+    }
+
+
+def assert_indexes_byte_identical(got: MateIndex, ref: MateIndex):
+    """Every offline artifact byte-identical (the shared
+    ``index_artifacts_equal`` contract), plus the config and the
+    candidate-CSR offsets the online engine derives from them."""
+    assert got.cfg == ref.cfg
+    assert index_artifacts_equal(got, ref)
+    # CSR layout the online engine consumes (gather_candidates offsets)
+    values = [ref.corpus.unique_values[i] for i in sorted(ref.postings)][:24]
+    blk_got, blk_ref = got.gather_candidates(values), ref.gather_candidates(values)
+    assert np.array_equal(blk_got.table_ptr, blk_ref.table_ptr)
+    assert np.array_equal(blk_got.table_ids, blk_ref.table_ids)
+    assert np.array_equal(blk_got.rows, blk_ref.rows)
+    assert np.array_equal(blk_got.value_idx, blk_ref.value_idx)
+
+
+# ---------------------------------------------------------------------------
+# Device-count equivalence matrix (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@needs_8_devices
+@pytest.mark.parametrize("bits", WIDTHS)
+@pytest.mark.parametrize("n_devices", DEVICE_COUNTS)
+def test_mesh_build_matrix_byte_identical(lake, single_host, n_devices, bits):
+    corpus, _q, _qc = lake
+    mesh = meshlib.make_mesh((n_devices,), ("data",))
+    idx, stats = build_index(
+        corpus, cfg=xash.XashConfig(bits=bits), use_corpus_char_freq=True,
+        mesh=mesh,
+    )
+    assert_indexes_byte_identical(idx, single_host[bits])
+    assert stats.n_shards == n_devices
+    assert stats.values_total == len(corpus.unique_values)
+    assert stats.bytes_hashed == corpus.unique_enc.size
+    assert sum(stats.shard_values) == stats.values_total
+    assert sum(stats.shard_rows) == corpus.total_rows
+    # one device falls back to the single-host pass (no mesh accounting)
+    assert (stats.mesh_shape is None) == (n_devices == 1)
+    assert stats.sharded == (n_devices > 1)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_mesh_built_session_discovery_identical(lake, single_host, bits):
+    """Downstream top-k parity: a sharded-built session's discover AND
+    discover_many match the single-host index bit-for-bit."""
+    corpus, query, q_cols = lake
+    mesh = meshlib.make_mesh((max(DEVICE_COUNTS),), ("data",))
+    session = MateSession.build(corpus, DiscoveryConfig(bits=bits), mesh=mesh)
+    assert session.build_stats is not None and session.build_stats.sharded
+    ref, _ = discovery.discover(single_host[bits], query, q_cols, k=10)
+    got, _ = session.discover(query, q_cols, k=10)
+    key = lambda es: [(e.table_id, e.joinability, e.mapping) for e in es]
+    assert key(got) == key(ref)
+    queries = [(query, q_cols)] + synthetic.make_mixed_queries(
+        corpus, 2, 10, 2, seed=11
+    )
+    out = session.discover_many(queries, k=[10, 4, 4])
+    for (q, qc), k_i, (entries, _st) in zip(queries, [10, 4, 4], out):
+        ref_i, _ = discovery.discover(single_host[bits], q, qc, k=k_i)
+        assert key(entries) == key(ref_i)
+
+
+@needs_8_devices
+def test_session_build_mesh_matches_session_build_host(lake):
+    """MateSession.build with and without a mesh agree artifact-for-artifact
+    (the session surface, not just the raw builder)."""
+    corpus, _q, _qc = lake
+    mesh = meshlib.make_mesh((4,), ("data",))
+    s_mesh = MateSession.build(corpus, DiscoveryConfig(bits=256), mesh=mesh)
+    s_host = MateSession.build(corpus, DiscoveryConfig(bits=256))
+    assert_indexes_byte_identical(s_mesh.index, s_host.index)
+    assert s_host.build_stats is not None and not s_host.build_stats.sharded
+
+
+# ---------------------------------------------------------------------------
+# Host-sharded merge (runs on ONE device in every CI leg)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 5, 8])
+def test_host_sharded_build_byte_identical(lake, single_host, n_shards):
+    corpus, _q, _qc = lake
+    idx, stats = build_index(
+        corpus, cfg=xash.XashConfig(bits=128), use_corpus_char_freq=True,
+        n_shards=n_shards,
+    )
+    assert_indexes_byte_identical(idx, single_host[128])
+    assert stats.n_shards == n_shards and stats.mesh_shape is None
+
+
+def test_merge_matches_single_host_csr(lake):
+    """merge_shard_postings over contiguous row shards == the one-shard CSR
+    (payload AND ptr), for uneven shard splits."""
+    corpus, _q, _qc = lake
+    n_values = len(corpus.unique_values)
+    payload_ref, counts_ref = _shard_postings(
+        corpus.cell_value_ids, 0, corpus.total_rows, n_values
+    )
+    ptr_ref = _csr_ptr(counts_ref)
+    bounds = [0, 7, 7, 100, corpus.total_rows]  # uneven + one empty shard
+    parts = [
+        _shard_postings(corpus.cell_value_ids, lo, hi, n_values)
+        for lo, hi in zip(bounds, bounds[1:])
+    ]
+    payload, ptr = merge_shard_postings(
+        [p for p, _ in parts], [c for _, c in parts], n_values
+    )
+    assert np.array_equal(ptr, ptr_ref)
+    assert np.array_equal(payload, payload_ref)
+
+
+def test_mesh_n_shards_conflict_raises(lake):
+    corpus, _q, _qc = lake
+    mesh = meshlib.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="n_shards"):
+        build_index(corpus, mesh=mesh, n_shards=3)
+
+
+def test_sharded_build_baseline_hash(lake, single_host):
+    """Non-xash hashes (host-side Python) shard over the same bounds and
+    merge identically — the fallback path under any mesh."""
+    corpus, _q, _qc = lake
+    ref = MateIndex(corpus, cfg=xash.XashConfig(bits=128), hash_name="murmur")
+    idx, stats = build_index(
+        corpus, cfg=xash.XashConfig(bits=128), hash_name="murmur", n_shards=3
+    )
+    assert np.array_equal(idx.value_lanes, ref.value_lanes)
+    assert np.array_equal(idx.superkeys, ref.superkeys)
+    assert len(stats.shard_hash_seconds) == 3
+
+
+# ---------------------------------------------------------------------------
+# §5.4 mutations compose with a sharded-built index
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_index_state(idx: MateIndex, rebuilt: MateIndex):
+    assert np.array_equal(idx.superkeys, rebuilt.superkeys)
+    for value in rebuilt.corpus.value_of:
+        got = sorted(map(tuple, idx.fetch_postings(value).tolist()))
+        want = sorted(map(tuple, rebuilt.fetch_postings(value).tolist()))
+        assert got == want, value
+
+
+def test_mutations_on_sharded_built_index():
+    """insert_table / update_cell on a sharded-built index behave exactly
+    like on a from-scratch rebuild (test_index.py's rebuild-consistency
+    contract).  Fresh corpus: §5.4 updates mutate it in place."""
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=60, seed=1))
+    query, q_cols, _expected, corpus = synthetic.make_query_with_ground_truth(
+        corpus
+    )
+    idx, _ = build_index(
+        corpus, cfg=xash.XashConfig(bits=128), use_corpus_char_freq=True,
+        n_shards=4,
+    )
+    key_cells = [
+        [query.cells[r][c] for c in q_cols] for r in range(query.n_rows)
+    ]
+    new_cells = [kc + ["sharded-extra"] for kc in key_cells]
+    tid = idx.insert_table(new_cells)
+    idx.update_cell(tid, 0, len(new_cells[0]) - 1, "mutated")
+    mutated = [list(r) for r in new_cells]
+    mutated[0][-1] = "mutated"
+    rebuilt = MateIndex(
+        Corpus([*corpus.tables[:-1], Table(tid, mutated)]),
+        cfg=idx.cfg,
+    )
+    _assert_same_index_state(idx, rebuilt)
+    # and the engines still agree post-mutation
+    seq, _ = discovery.discover(idx, query, q_cols, k=8)
+    ses = MateSession(idx, DiscoveryConfig())
+    got, _ = ses.discover(query, q_cols, k=8)
+    assert [(e.table_id, e.joinability, e.mapping) for e in got] == [
+        (e.table_id, e.joinability, e.mapping) for e in seq
+    ]
+    assert tid in [e.table_id for e in got]
+
+
+# ---------------------------------------------------------------------------
+# Property tests: hypothesis corpora (skewed / duplicate / empty columns)
+# ---------------------------------------------------------------------------
+
+# small value pool → heavy duplication across tables (skewed posting lists);
+# includes the empty string (hashes to zero lanes) and multi-char values
+_POOL = ["", "a", "aa", "b", "zz9", "same", "same", "x y", "0", "long value 42"]
+
+if HAVE_HYPOTHESIS:
+    cell_strat = st.sampled_from(_POOL)
+    table_strat = st.integers(min_value=1, max_value=3).flatmap(
+        lambda n_cols: st.lists(
+            st.lists(cell_strat, min_size=n_cols, max_size=n_cols),
+            min_size=0,
+            max_size=6,
+        )
+    )
+    corpus_strat = st.lists(table_strat, min_size=1, max_size=4)
+else:  # pragma: no cover — given/settings degrade to skip markers above
+    cell_strat = corpus_strat = None
+
+
+def _corpus_from(tables_cells) -> Corpus:
+    return Corpus(
+        [Table(i, cells) for i, cells in enumerate(tables_cells)]
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(tables_cells=corpus_strat, n_shards=st.integers(min_value=1, max_value=6))
+def test_property_shard_merge_matches_single_host(tables_cells, n_shards):
+    """Hypothesis corpora (duplicate values, empty strings/columns, ragged
+    widths, zero-row tables): shard-merge == single-host
+    ``_hash_unique_values`` + postings at any shard count."""
+    corpus = _corpus_from(tables_cells)
+    cfg = xash.XashConfig(bits=128)
+    ref = MateIndex(corpus, cfg=cfg)
+    idx, _stats = build_index(corpus, cfg=cfg, n_shards=n_shards)
+    want = _hash_unique_values(
+        corpus.unique_values, corpus.unique_enc, ref.cfg, "xash",
+        corpus.avg_row_width(),
+    )
+    assert np.array_equal(idx.value_lanes, want)
+    assert_indexes_byte_identical(idx, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tables_cells=corpus_strat,
+    extra=st.lists(
+        st.lists(cell_strat, min_size=2, max_size=2), min_size=1, max_size=4
+    ),
+)
+def test_property_add_rows_then_rebuild_consistency(tables_cells, extra):
+    """§5.4 on sharded-built indexes: adding a table and then comparing with
+    a from-scratch rebuild holds for generated corpora too."""
+    corpus = _corpus_from(tables_cells)
+    idx, _ = build_index(corpus, cfg=xash.XashConfig(bits=128), n_shards=3)
+    tid = idx.insert_table(extra)
+    rebuilt = MateIndex(
+        Corpus([*corpus.tables[:-1], Table(tid, extra)]), cfg=idx.cfg
+    )
+    _assert_same_index_state(idx, rebuilt)

@@ -56,6 +56,26 @@ def test_discovery_driver_end_to_end(capsys):
     assert "precision" in out and "distributed filter" in out
 
 
+def test_discovery_driver_sharded_build_subprocess():
+    """--build-mesh N: the driver forces N virtual devices, builds the
+    session over the mesh (shard_map hash pass + host merge) and the
+    engines stay bit-identical — subprocess because the device count must
+    be set before jax initialises."""
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.discovery",
+            "--build-mesh", "4", "--n-tables", "60", "--queries", "1",
+            "--rows", "8",
+        ],
+        capture_output=True, text=True, timeout=600,
+        cwd=__file__.rsplit("/", 2)[0],
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "build stats: shards=4 mesh={'data': 4}" in res.stdout, res.stdout
+    assert "engines_bit_identical=True" in res.stdout
+
+
 def test_enrichment_operator():
     corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=50, seed=4))
     base_cells = [["k%da" % i, "k%db" % i, "payload"] for i in range(10)]
