@@ -302,6 +302,7 @@ def discover_batched(
     *,
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
+    filter_lanes: int | None = None,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
 
@@ -322,10 +323,22 @@ def discover_batched(
     them raises TypeError; pin the path with ``backend=`` instead
     (``use_kernel=False`` -> 'numpy', ``fused=True`` -> 'fused',
     ``fused=False`` -> 'pallas').
+
+    ``filter_lanes`` runs the filter launches over only the first N uint32
+    lanes of the super keys (the serving tier's pressure-degrade path:
+    ``filter_lanes=4`` ≙ 128-bit filtering on a wider index).  A lane-prefix
+    subsumption test is a pure relaxation of the full-width test — zero
+    false negatives — so after exact verification the top-k is BIT-IDENTICAL
+    to the full-width run; only filter precision (and the rule-2 bound
+    tightness) degrades.
     """
     bk = registry.resolve_backend(backend)
     plan = plan_query(index, query, q_cols, init_mode)
     stats, block = plan.stats, plan.block
+    full_lanes = plan.q_sk.shape[1]
+    fl = full_lanes if filter_lanes is None else max(1, min(int(filter_lanes), full_lanes))
+    stats.filter_lanes = fl
+    q_f = plan.q_sk if fl == full_lanes else plan.q_sk[:, :fl]
     topk = _TopK(k)
     n_tables = block.n_tables
     for start in range(0, n_tables, batch_tables):
@@ -340,6 +353,7 @@ def discover_batched(
         lo, hi = int(block.table_ptr[start]), int(block.table_ptr[stop])
         rows = block.rows[lo:hi]
         row_sk = index.superkey_of_rows(rows)
+        row_f = row_sk if fl == full_lanes else row_sk[:, :fl]
         elig = plan.elig[lo:hi]
         seg = _segment_ids(block.table_ptr, start, stop)
         stats.pl_items_checked += int(rows.shape[0])
@@ -351,7 +365,7 @@ def discover_batched(
             # in _score_tables.  (ops falls back to the composed path above
             # its table cap — hits non-None — and stats must follow suit.)
             hits, counts = ops.filter_hits_table_counts(
-                row_sk, plan.q_sk, elig, seg, stop - start, backend=bk,
+                row_f, q_f, elig, seg, stop - start, backend=bk,
                 fused_block_n=fused_block_n,
             )
             if hits is None:
@@ -364,14 +378,14 @@ def discover_batched(
             # tables' slices transfer lazily in _score_tables.
             stats.filter_matrix_bytes += int(elig.size)
             hits, counts = ops.filter_hits_table_counts(
-                row_sk, plan.q_sk, elig, seg, stop - start, backend=bk,
+                row_f, q_f, elig, seg, stop - start, backend=bk,
             )
         else:
             # heap not full (bound 0): nothing can be pruned, every hit
             # block is about to be verified — single-transfer path.
             stats.filter_matrix_bytes += int(elig.size)
             hits, counts = _hits_counts_host(
-                row_sk, plan.q_sk, elig, seg, stop - start, bk
+                row_f, q_f, elig, seg, stop - start, bk
             )
         # readback = match-matrix bytes materialised host-side: the whole
         # matrix when any path produced host hits (size-based numpy
@@ -389,6 +403,188 @@ def discover_batched(
     return topk.entries(), stats
 
 
+@dataclasses.dataclass
+class PlanCounts:
+    """Phase-A artifact of the two-phase group engine: one request's plan
+    plus everything the shared filter launch produced for it — the seam the
+    serving tier's hot-table bound cache stores (``serve.cache.BoundCache``).
+
+    ``counts`` is the per-table eligible-hit count vector driving rule-1/2
+    pruning; ``hits`` is this plan's slice of the group match matrix (None
+    on the fused counts-only path, and always None once cached — see
+    ``cacheable``); ``row_sk`` keeps the FULL-width row super keys so a
+    dropped/absent matrix is recomputed lazily during scoring,
+    bit-identically.  ``epoch`` pins ``MateIndex.mutation_epoch`` at launch
+    time: a PlanCounts is replayable only while the index is unchanged.
+    """
+
+    plan: QueryPlan
+    row_sk: np.ndarray  # uint32[n_items, lanes] full-width row super keys
+    counts: np.ndarray  # int32[n_tables] per-table eligible-hit counts
+    hits: object = None  # np/jnp [n_items, group_keys] slice, or None
+    group_keys: int = 0  # key count of the SHARED launch (accounting)
+    hits_host: bool = False  # group matrix came back host-side (np)
+    fused: bool = False  # counts-only fused launch (no matrix anywhere)
+    filter_lanes: int = 0  # lanes the launch probed (< index width: degraded)
+    epoch: int = 0  # index.mutation_epoch at launch time
+
+    def cacheable(self) -> "PlanCounts":
+        """A copy safe to hold in a cache: the (possibly device-resident)
+        match-matrix slice is dropped; scoring recomputes surviving tables'
+        slices from ``row_sk`` on demand — same subsumption predicate, so
+        verification inputs (and the top-k) are bit-identical."""
+        return dataclasses.replace(self, hits=None)
+
+
+def plan_and_count(
+    index: MateIndex,
+    queries: list[tuple[Table, list[int]]],
+    backend: Backend | str | None = None,
+    *,
+    init_mode: str = "cardinality",
+    filter_lanes: int | None = None,
+    fused_block_n: int | None = None,
+) -> list[PlanCounts]:
+    """Phase A of ``discover_many``: plan every request, then run the ONE
+    shared filter launch and demux it into per-request ``PlanCounts``.
+
+    Everything up to (and including) ``gather_candidates`` + the §6.3
+    filter lives here; ``score_from_counts`` is phase B (pruning, exact
+    verification, the heap).  The split is the serving tier's bound-cache
+    seam: a hot query's ``PlanCounts`` can be stored and re-scored later —
+    at a different ``k`` even — without touching the index or the device.
+
+    ``filter_lanes`` restricts the launch to a lane prefix of the super
+    keys (the pressure-degrade path, see ``discover_batched``): a pure
+    relaxation — zero false negatives — so downstream verification still
+    yields bit-identical top-k.
+    """
+    bk = registry.resolve_backend(backend)
+    plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
+    if not plans:
+        return []
+    rows_all = np.concatenate([p.block.rows for p in plans])
+    q_all = np.concatenate([p.q_sk for p in plans])
+    # block-diagonal eligibility (a request's keys only probe its own
+    # candidate rows) + a global per-item table index for the one-pass
+    # per-table rule-1/2 count reduction.
+    elig_all = np.zeros((rows_all.shape[0], q_all.shape[0]), dtype=bool)
+    seg_all = np.zeros(rows_all.shape[0], dtype=np.int32)
+    r_off = k_off = 0
+    n_tables_all = 0
+    for p in plans:
+        ni, ki, ti = p.block.n_items, p.q_sk.shape[0], p.block.n_tables
+        elig_all[r_off : r_off + ni, k_off : k_off + ki] = p.elig
+        if ni:
+            seg_all[r_off : r_off + ni] = n_tables_all + _segment_ids(
+                p.block.table_ptr, 0, ti
+            )
+        r_off += ni
+        k_off += ki
+        n_tables_all += ti
+    row_sk_all = index.superkey_of_rows(rows_all)
+    full_lanes = row_sk_all.shape[1]
+    fl = full_lanes if filter_lanes is None else max(1, min(int(filter_lanes), full_lanes))
+    row_f = row_sk_all if fl == full_lanes else row_sk_all[:, :fl]
+    q_f = q_all if fl == full_lanes else q_all[:, :fl]
+    if bk.fused:
+        # ONE fused filter+segment-count launch for the whole group: the
+        # (Σ rows × Σ keys) matrix is never materialised; only the group
+        # counts vector is read back.  Surviving tables recompute their
+        # own-keys hit slices lazily in _score_tables (bit-identical to
+        # slicing the block-diagonal of the full matrix, since elig
+        # already restricts each row to its own request's keys).
+        hits_all, counts_all = ops.filter_hits_table_counts(
+            row_f, q_f, elig_all, seg_all, n_tables_all,
+            backend=bk, fused_block_n=fused_block_n,
+        )
+    else:
+        # ONE subsumption launch for the whole group.  Unlike
+        # ``discover_batched`` (whose later batches are often pruned
+        # without any matrix transfer), every request here starts with an
+        # empty heap (entry bound 0), so most plans' hit blocks are
+        # needed for verification — the matrix comes back to the host in
+        # one transfer and the per-table rule-1/2 counts are a cheap
+        # host reduction over it.
+        hits_all, counts_all = _hits_counts_host(
+            row_f, q_f, elig_all, seg_all, n_tables_all, bk,
+        )
+    epoch = index.mutation_epoch
+    out: list[PlanCounts] = []
+    r_off = k_off = t_off = 0
+    for p in plans:
+        ni, ki, ti = p.block.n_items, p.q_sk.shape[0], p.block.n_tables
+        out.append(
+            PlanCounts(
+                plan=p,
+                row_sk=row_sk_all[r_off : r_off + ni],
+                counts=counts_all[t_off : t_off + ti],
+                hits=None if hits_all is None
+                else hits_all[r_off : r_off + ni, k_off : k_off + ki],
+                group_keys=0 if hits_all is None else int(hits_all.shape[1]),
+                hits_host=isinstance(hits_all, np.ndarray),
+                fused=hits_all is None,
+                filter_lanes=fl,
+                epoch=epoch,
+            )
+        )
+        r_off += ni
+        k_off += ki
+        t_off += ti
+    return out
+
+
+def score_from_counts(
+    index: MateIndex,
+    pc: PlanCounts,
+    k: int = 10,
+    *,
+    prefetch_frac: float = _PREFETCH_FRAC,
+    from_cache: bool = False,
+) -> tuple[list[TopKEntry], DiscoveryStats]:
+    """Phase B of ``discover_many``: rule-1/2 pruning + exact verification
+    + the top-k heap over one request's ``PlanCounts``.
+
+    Re-runnable: stats land on a FRESH copy of the plan's, so the same
+    PlanCounts (a bound-cache hit) can be scored any number of times — at
+    any ``k``.  ``from_cache=True`` skips the launch-transfer accounting
+    (an earlier request already paid for the filter) and forces the
+    lazy-recompute path, since cached entries hold no matrix slice.
+    """
+    plan = dataclasses.replace(pc.plan, stats=dataclasses.replace(pc.plan.stats))
+    stats, block = plan.stats, plan.block
+    n_items = block.n_items
+    stats.pl_items_checked = n_items
+    stats.filter_checks = int(plan.elig.sum())
+    stats.filter_passed = int(pc.counts.sum())
+    stats.filter_lanes = pc.filter_lanes
+    hits = pc.hits
+    if from_cache:
+        hits = None
+    elif pc.fused:  # fused counts-only group launch succeeded
+        stats.filter_fused_launches += 1
+        stats.filter_readback_bytes += pc.counts.nbytes
+    else:
+        # the shared launch computes (and reads back) this plan's rows
+        # against the GROUP's keys — the documented cross-product trade.
+        # (device-resident hits — the fused→composed table-cap fallback —
+        # transfer lazily in _score_tables, which does its own readback
+        # accounting.)
+        stats.filter_matrix_bytes += n_items * pc.group_keys
+        if pc.hits_host:
+            stats.filter_readback_bytes += n_items * pc.group_keys
+    topk = _TopK(k)
+    # rule 1 (PL-desc suffix pruning) applies inside the range: the filter
+    # already ran batched for every table, only verification work and
+    # hit-slice readbacks (or fused recomputes) remain to be skipped.
+    _score_tables(
+        index, plan, topk, hits, pc.counts, block.rows, 0, block.n_tables, 0,
+        rule1=True, row_sk=pc.row_sk, elig=plan.elig,
+        prefetch_frac=prefetch_frac,
+    )
+    return topk.entries(), stats
+
+
 def discover_many(
     index: MateIndex,
     queries: list[tuple[Table, list[int]]],
@@ -398,6 +594,7 @@ def discover_many(
     *,
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
+    filter_lanes: int | None = None,
 ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
     """Multi-query discovery sharing ONE filter launch.
 
@@ -405,6 +602,9 @@ def discover_many(
     subsumption launch; the match matrix is then demuxed per request and
     scored with the same rule-1/rule-2 + heap semantics, so each request's
     top-k is bit-identical to its solo ``discover``/``discover_batched`` run.
+    Internally this is ``plan_and_count`` (phase A: the shared launch)
+    composed with ``score_from_counts`` (phase B: per-request scoring) —
+    the seam the serving tier's caches plug into.
 
     ``backend`` resolves exactly as in ``discover_batched`` (and the removed
     ``use_kernel=``/``fused=`` kwargs raise TypeError here too).  A 'fused'
@@ -423,93 +623,17 @@ def discover_many(
     groups bounded (``DiscoveryEngine(batch=...)``, default 8) rather than
     fusing unbounded request sets.
     """
-    bk = registry.resolve_backend(backend)
     ks = [k] * len(queries) if isinstance(k, int) else list(k)
     assert len(ks) == len(queries)
-    plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
-    n_tables_all = 0
-    row_sk_all = hits_all = counts_all = None
-    if plans:
-        rows_all = np.concatenate([p.block.rows for p in plans])
-        q_all = np.concatenate([p.q_sk for p in plans])
-        # block-diagonal eligibility (a request's keys only probe its own
-        # candidate rows) + a global per-item table index for the one-pass
-        # per-table rule-1/2 count reduction below.
-        elig_all = np.zeros((rows_all.shape[0], q_all.shape[0]), dtype=bool)
-        seg_all = np.zeros(rows_all.shape[0], dtype=np.int32)
-        r_off = k_off = 0
-        for p in plans:
-            ni, ki, ti = p.block.n_items, p.q_sk.shape[0], p.block.n_tables
-            elig_all[r_off : r_off + ni, k_off : k_off + ki] = p.elig
-            if ni:
-                seg_all[r_off : r_off + ni] = n_tables_all + _segment_ids(
-                    p.block.table_ptr, 0, ti
-                )
-            r_off += ni
-            k_off += ki
-            n_tables_all += ti
-        row_sk_all = index.superkey_of_rows(rows_all)
-        if bk.fused:
-            # ONE fused filter+segment-count launch for the whole group: the
-            # (Σ rows × Σ keys) matrix is never materialised; only the group
-            # counts vector is read back.  Surviving tables recompute their
-            # own-keys hit slices lazily in _score_tables (bit-identical to
-            # slicing the block-diagonal of the full matrix, since elig
-            # already restricts each row to its own request's keys).
-            hits_all, counts_all = ops.filter_hits_table_counts(
-                row_sk_all, q_all, elig_all, seg_all, n_tables_all,
-                backend=bk, fused_block_n=fused_block_n,
-            )
-        else:
-            # ONE subsumption launch for the whole group.  Unlike
-            # ``discover_batched`` (whose later batches are often pruned
-            # without any matrix transfer), every request here starts with an
-            # empty heap (entry bound 0), so most plans' hit blocks are
-            # needed for verification — the matrix comes back to the host in
-            # one transfer and the per-table rule-1/2 counts are a cheap
-            # host reduction over it.
-            hits_all, counts_all = _hits_counts_host(
-                row_sk_all, q_all, elig_all, seg_all, n_tables_all, bk,
-            )
-    out: list[tuple[list[TopKEntry], DiscoveryStats]] = []
-    r_off = k_off = t_off = 0
-    for plan, k_i in zip(plans, ks):
-        n_items, n_keys = plan.block.n_items, plan.q_sk.shape[0]
-        stats, block = plan.stats, plan.block
-        counts = counts_all[t_off : t_off + block.n_tables]
-        stats.pl_items_checked = n_items
-        stats.filter_checks = int(plan.elig.sum())
-        stats.filter_passed = int(counts.sum())
-        if hits_all is None:  # fused counts-only group launch succeeded
-            hits = None
-            stats.filter_fused_launches += 1
-            stats.filter_readback_bytes += counts.nbytes
-        else:
-            hits = hits_all[r_off : r_off + n_items, k_off : k_off + n_keys]
-            # the shared launch computes (and reads back) this plan's rows
-            # against the GROUP's keys — the documented cross-product trade.
-            # (device-resident hits — the fused→composed table-cap fallback —
-            # transfer lazily in _score_tables, which does its own readback
-            # accounting.)
-            stats.filter_matrix_bytes += n_items * hits_all.shape[1]
-            if isinstance(hits_all, np.ndarray):
-                stats.filter_readback_bytes += n_items * hits_all.shape[1]
-        topk = _TopK(k_i)
-        # rule 1 (PL-desc suffix pruning) applies inside the range: the
-        # filter already ran batched for every table, only verification work
-        # and hit-slice readbacks (or fused recomputes) remain to be skipped.
-        _score_tables(
-            index, plan, topk, hits, counts, block.rows, 0, block.n_tables, 0,
-            rule1=True,
-            row_sk=None if row_sk_all is None else row_sk_all[r_off : r_off + n_items],
-            elig=plan.elig,
-            prefetch_frac=prefetch_frac,
-        )
-        r_off += n_items
-        k_off += n_keys
-        t_off += block.n_tables
-        out.append((topk.entries(), stats))
-    return out
+    pcs = plan_and_count(
+        index, queries, backend,
+        init_mode=init_mode, filter_lanes=filter_lanes,
+        fused_block_n=fused_block_n,
+    )
+    return [
+        score_from_counts(index, pc, k_i, prefetch_frac=prefetch_frac)
+        for pc, k_i in zip(pcs, ks)
+    ]
 
 
 def filter_outcomes(

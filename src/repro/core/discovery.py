@@ -44,6 +44,12 @@ class DiscoveryStats:
     # the match matrix was never produced (not even in HBM), so these
     # contribute ZERO to filter_matrix_bytes — counts-only readback plus
     # on-demand recomputed slices for the tables that survive pruning
+    filter_lanes: int = 0  # uint32 lanes the filter launch probed (0: the
+    # scalar engine, which has no lane-sliced filter).  Below the index
+    # width this was a DEGRADED launch (serving-tier pressure relief): a
+    # lane-prefix subsumption test is a pure relaxation — no false
+    # negatives — so exact verification still yields bit-identical top-k,
+    # just with more survivors to verify.
 
     @property
     def readback_frac(self) -> float:

@@ -270,6 +270,7 @@ class MateIndex:
         )
         self.postings = _postings_dict(payload, _csr_ptr(counts))
         self._deleted_tables: set[int] = set()
+        self._mutations = 0
 
     @classmethod
     def _from_build(
@@ -292,12 +293,22 @@ class MateIndex:
         self.superkeys = superkeys
         self.postings = _postings_dict(payload, ptr)
         self._deleted_tables = set()
+        self._mutations = 0
         return self
 
     @property
     def bits(self) -> int:
         """Hash width this index was built at (128/256/512 → 4/8/16 lanes)."""
         return self.cfg.bits
+
+    @property
+    def mutation_epoch(self) -> int:
+        """Monotonic count of §5.4 mutations (insert/delete/update) applied
+        to this index.  Anything derived from index state at epoch e —
+        cached top-k results, cached candidate counts — is valid exactly
+        while ``mutation_epoch == e`` still holds (``serve.cache`` keys its
+        invalidation on this)."""
+        return self._mutations
 
     # -- online-side hashing --------------------------------------------------
 
@@ -397,6 +408,7 @@ class MateIndex:
 
     def insert_table(self, cells: list[list[str]], name: str = "") -> int:
         """Append a new table; returns its table id."""
+        self._mutations += 1
         corpus = self.corpus
         table = Table(table_id=len(corpus.tables), cells=cells, name=name)
         n_rows, n_cols = table.n_rows, table.n_cols
@@ -447,12 +459,14 @@ class MateIndex:
 
     def delete_table(self, table_id: int) -> None:
         """Tombstone a table (PL items filtered at fetch; §5.4 delete)."""
+        self._mutations += 1
         self._deleted_tables.add(table_id)
         lo, hi = self.corpus.row_base[table_id], self.corpus.row_base[table_id + 1]
         self.superkeys[lo:hi] = 0
 
     def update_cell(self, table_id: int, row: int, col: int, value: str) -> None:
         """Update one cell: re-hash the affected row's super key (§5.4)."""
+        self._mutations += 1
         corpus = self.corpus
         grow = int(corpus.row_base[table_id]) + row
         old_vid = int(corpus.cell_value_ids[grow, col])

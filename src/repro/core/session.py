@@ -68,6 +68,27 @@ class DiscoveryConfig:
                      fill before the engine serves a partial group
                      (None: only full groups flush; ``flush()`` always
                      drains regardless).
+      deadline_margin — seconds before a group's ``flush_after`` deadline
+                     the engine launches it PARTIAL, so the group is served
+                     by its deadline instead of merely started at it
+                     (None: auto — an EWMA of observed group service times).
+      max_queue    — bounded submit queue: beyond this many waiting
+                     requests admission control kicks in (None: unbounded).
+      pressure_policy — what admission control does at ``max_queue``:
+                     'shed' rejects the request's future with
+                     ``serve.engine.AdmissionError``; 'degrade' admits it
+                     flagged for ``degrade_bits`` filtering (sheds anyway
+                     at 2×``max_queue`` — degraded filtering relieves
+                     filter bandwidth, not an unbounded backlog).
+      degrade_bits — filter width for degraded requests (a lane-prefix
+                     relaxation of the index width: results stay
+                     bit-identical, filter precision drops).
+      result_cache — capacity (entries) of the serving tier's query-result
+                     cache; 0 disables.  Hits are bit-identical replays of
+                     the cached top-k, invalidated on §5.4 mutations.
+      bound_cache  — capacity (entries) of the hot-table bound cache
+                     (cached ``PlanCounts``: hits skip gather_candidates +
+                     the filter launch); 0 disables.
     """
 
     bits: int = 128
@@ -81,6 +102,12 @@ class DiscoveryConfig:
     use_corpus_char_freq: bool = True
     window: int = 8
     flush_after: float | None = None
+    deadline_margin: float | None = 0.0
+    max_queue: int | None = None
+    pressure_policy: str = "shed"
+    degrade_bits: int = 128
+    result_cache: int = 0
+    bound_cache: int = 0
 
     def __post_init__(self):
         if self.bits not in VALID_BITS:
@@ -104,6 +131,24 @@ class DiscoveryConfig:
             raise ValueError(f"window must be >= 1, got {self.window}")
         if self.flush_after is not None and self.flush_after < 0:
             raise ValueError(f"flush_after must be >= 0, got {self.flush_after}")
+        if self.deadline_margin is not None and self.deadline_margin < 0:
+            raise ValueError(
+                f"deadline_margin must be >= 0 or None (auto), got {self.deadline_margin}"
+            )
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, got {self.max_queue}")
+        if self.pressure_policy not in ("shed", "degrade"):
+            raise ValueError(
+                f"pressure_policy must be 'shed' or 'degrade', got {self.pressure_policy!r}"
+            )
+        if self.degrade_bits not in VALID_BITS:
+            raise ValueError(
+                f"degrade_bits must be one of {VALID_BITS}, got {self.degrade_bits}"
+            )
+        if self.result_cache < 0:
+            raise ValueError(f"result_cache must be >= 0, got {self.result_cache}")
+        if self.bound_cache < 0:
+            raise ValueError(f"bound_cache must be >= 0, got {self.bound_cache}")
 
     def resolve_backend(self) -> Backend:
         """The backend this config selects, under the registry precedence."""
@@ -122,6 +167,12 @@ class SessionStats:
     filter_matrix_bytes: int = 0
     filter_readback_bytes: int = 0
     filter_fused_launches: int = 0
+    # serving-tier counters (bumped by ``serve.engine.DiscoveryEngine``):
+    cache_hits: int = 0  # requests answered from the query-result cache
+    bound_hits: int = 0  # requests scored from cached PlanCounts (skipped
+    # gather_candidates + the filter launch)
+    shed: int = 0  # requests rejected by admission control (queue full)
+    degraded: int = 0  # requests admitted at degrade_bits filter width
 
     def absorb(self, stats: DiscoveryStats) -> None:
         self.requests += 1
@@ -240,6 +291,48 @@ class MateSession:
             self.stats.absorb(stats)
         return out
 
+    def plan_and_count(
+        self,
+        queries: list[tuple[Table, list[int]]],
+        *,
+        filter_lanes: int | None = None,
+    ) -> list["batched_lib.PlanCounts"]:
+        """Phase A of group discovery: the shared filter launch, demuxed per
+        request (``core.batched.plan_and_count`` under this session's
+        backend/config).  No stats are absorbed here — a request only counts
+        when its PlanCounts is scored.  ``filter_lanes`` runs the launch at
+        a lane prefix (the serving tier's pressure-degrade path)."""
+        return batched_lib.plan_and_count(
+            self.index,
+            queries,
+            self.backend,
+            init_mode=self.config.init_mode,
+            filter_lanes=filter_lanes,
+            fused_block_n=self.config.fused_block_n,
+        )
+
+    def score_from_counts(
+        self,
+        pc: "batched_lib.PlanCounts",
+        k: int | None = None,
+        *,
+        from_cache: bool = False,
+    ) -> tuple[list[TopKEntry], DiscoveryStats]:
+        """Phase B: score one ``PlanCounts`` (rule-1/2 pruning + exact
+        verification + top-k heap) and absorb the request into session
+        stats.  Safe to call repeatedly on the same PlanCounts — the
+        bound-cache replay path (``from_cache=True`` skips launch-transfer
+        accounting; the filter was paid for by an earlier request)."""
+        entries, stats = batched_lib.score_from_counts(
+            self.index,
+            pc,
+            self.config.k if k is None else k,
+            prefetch_frac=self.config.prefetch_frac,
+            from_cache=from_cache,
+        )
+        self.stats.absorb(stats)
+        return entries, stats
+
     # index mutation passes through (§5.4): the session stays valid because
     # MateIndex updates are in-place and the backend/config hold no arrays.
     def insert_table(self, cells: list[list[str]], name: str = "") -> int:
@@ -247,6 +340,9 @@ class MateSession:
 
     def delete_table(self, table_id: int) -> None:
         self.index.delete_table(table_id)
+
+    def update_cell(self, table_id: int, row: int, col: int, value: str) -> None:
+        self.index.update_cell(table_id, row, col, value)
 
     def __repr__(self) -> str:
         return (

@@ -57,6 +57,19 @@ def main(argv=None):
                          "MATE_FILTER_BACKEND, then platform default)")
     ap.add_argument("--flush-after", type=float, default=None,
                     help="serving deadline (s) for partial DiscoveryEngine groups")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded submit queue: admission control kicks in at "
+                         "this many waiting requests (default: unbounded)")
+    ap.add_argument("--pressure-policy", default="shed",
+                    choices=["shed", "degrade"],
+                    help="at max_queue: reject with AdmissionError, or admit "
+                         "at degraded 128-bit filtering (still bit-identical)")
+    ap.add_argument("--result-cache", type=int, default=0,
+                    help="query-result cache capacity (0: off) — repeated "
+                         "queries answer at submit, invalidated on mutations")
+    ap.add_argument("--bound-cache", type=int, default=0,
+                    help="hot-table bound cache capacity (0: off) — warm "
+                         "queries skip gather+filter at any k")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--build-mesh", type=int, default=1, metavar="N",
                     help="shard the offline index build over an N-device mesh "
@@ -81,7 +94,9 @@ def main(argv=None):
     )
     config = DiscoveryConfig(
         bits=args.bits, k=args.k, backend=args.backend, hash_name=args.hash,
-        flush_after=args.flush_after,
+        flush_after=args.flush_after, max_queue=args.max_queue,
+        pressure_policy=args.pressure_policy, result_cache=args.result_cache,
+        bound_cache=args.bound_cache,
     )
     build_mesh = None
     if args.build_mesh > 1:
@@ -169,6 +184,18 @@ def main(argv=None):
         f"launches of ≤{engine.batch} "
         f"({t_many:.2f}s, vs {agg['t_seq']:.2f}s sequential, all_served={agree})"
     )
+    if args.result_cache or args.bound_cache:
+        # replay the same traffic: repeats answer from the serving caches
+        t0 = time.time()
+        replay = [engine.discover(q, q_cols) for q, q_cols in queries]
+        t_replay = time.time() - t0
+        hot = all(r.from_cache for r in replay) if args.result_cache else True
+        print(
+            f"[mate] serving caches: replayed {len(replay)} requests in "
+            f"{t_replay:.3f}s (cache_hits={session.stats.cache_hits}, "
+            f"bound_hits={session.stats.bound_hits}, all_from_cache={hot}, "
+            f"shed={session.stats.shed}, degraded={session.stats.degraded})"
+        )
     print(f"[mate] session: {session}")
 
     if not queries:
