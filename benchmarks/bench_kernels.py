@@ -91,6 +91,30 @@ def kernels():
         f"out_bytes={out_comp};fused_vs_composed_wallclock={dt_comp/dt_fused:.2f}x",
         backend="xla",  # composed reference is pinned to the XLA path
     )
+    # gather-fused: same launch, but candidate INPUT rows are DMA-gathered
+    # from the device-resident superkey store inside the kernel — the host
+    # ships n int32 offsets instead of n×lanes uint32 superkeys.  The
+    # structural metric is input bytes shipped per launch; wall clock in
+    # interpret mode only shows the path isn't pathological.
+    import jax.numpy as jnp
+
+    store = jnp.asarray(
+        np.concatenate([row_sk, RNG.integers(0, 2**32, row_sk.shape, np.uint32)])
+    )
+    rows_idx = RNG.permutation(store.shape[0])[:n].astype(np.int64)
+    dt_gather = _time(
+        ops.gather_filter_table_counts, store, rows_idx, q_sk, elig, seg, n_tables
+    )
+    lanes = row_sk.shape[1]
+    in_gather = n * 4  # int32 offsets
+    in_comp = n * lanes * 4  # host-gathered uint32 superkeys
+    common.emit(
+        "kern/gather_filter_table_counts_4096x256", dt_gather * 1e6,
+        f"in_bytes={in_gather};gather_bytes_saved={in_comp - in_gather};"
+        f"in_bytes_vs_composed={in_gather/in_comp:.4f};"
+        f"gather_vs_fused_wallclock={dt_gather/dt_fused:.2f}x",
+        backend="fused-gather",  # this row pins the gather-fused kernel
+    )
 
 
 def engines():
@@ -99,7 +123,7 @@ def engines():
     idx = common.index("xash", 128)
     # warm jit/dispatch caches so the timed runs (and the CI regression gate
     # ratios derived from them) measure steady state, not compiles
-    for engine in ("seq", "batched", "batched_fused"):
+    for engine in ("seq", "batched", "batched_fused", "batched_gather"):
         common.run_discovery(idx, queries, engine=engine)
     t_sci, _ = common.run_discovery(idx, queries, row_filter=False)
     t_seq, _ = common.run_discovery(idx, queries)
@@ -121,6 +145,17 @@ def engines():
         f"fused_launches={stf['fused_launches']};"
         f"readback_bytes={stf['readback_bytes']}",
         backend="fused",  # run_discovery pins backend='fused' for this row
+    )
+    # gather-fused engine path: same counts-only contract PLUS no host
+    # superkey gather — gather_saved counts the launch input bytes that
+    # stayed in the device store (n_candidates × (lanes·4 − 4) per launch).
+    t_gat, stg = common.run_discovery(idx, queries, engine="batched_gather")
+    common.emit(
+        "engine/mate_batched_gather", t_gat / n * 1e6,
+        f"vs_fused={t_fus/t_gat:.2f}x;matrix_bytes={stg['matrix_bytes']};"
+        f"fused_launches={stg['fused_launches']};"
+        f"gather_bytes_saved={stg['gather_saved']}",
+        backend="fused-gather",  # run_discovery pins backend='fused-gather'
     )
 
 

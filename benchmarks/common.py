@@ -93,20 +93,24 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     share one filter launch — the DiscoveryEngine path), plus
     ``batched_fused`` / ``many_fused`` (backend='fused': the fused
     filter+segment-count kernel — counts-only readback, zero match-matrix
-    bytes).
+    bytes), and ``batched_gather`` / ``many_gather`` (backend='fused-gather':
+    the gather-fused launch — candidate superkeys are DMA-gathered from the
+    device-resident store inside the kernel, so the host ships only int32
+    row offsets; ``gather_saved`` below counts the bytes that never moved).
     """
     tp = fp = checks = passed = 0
     mat_bytes = rb_bytes = 0
     precs = []
     t0 = time.perf_counter()
-    if engine in ("many", "many_fused"):
+    if engine in ("many", "many_fused", "many_gather"):
+        many_backend = {"many_fused": "fused", "many_gather": "fused-gather"}
         stats = [
             st
             for _, st in discover_many(
                 idx,
                 [(q, c) for q, c in queries],
                 k=k,
-                backend="fused" if engine == "many_fused" else None,
+                backend=many_backend.get(engine),
             )
         ]
     else:
@@ -116,6 +120,10 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
                 _, st = discover_batched(idx, q, q_cols, k=k)
             elif engine == "batched_fused":
                 _, st = discover_batched(idx, q, q_cols, k=k, backend="fused")
+            elif engine == "batched_gather":
+                _, st = discover_batched(
+                    idx, q, q_cols, k=k, backend="fused-gather"
+                )
             elif engine == "batched_np":
                 _, st = discover_batched(idx, q, q_cols, k=k, backend="numpy")
             else:
@@ -123,6 +131,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
             stats.append(st)
     dt = time.perf_counter() - t0
     fused_launches = 0
+    gather_saved = 0
     for st in stats:
         tp += st.verified_tp
         fp += st.verified_fp
@@ -131,6 +140,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         mat_bytes += st.filter_matrix_bytes
         rb_bytes += st.filter_readback_bytes
         fused_launches += st.filter_fused_launches
+        gather_saved += st.gather_bytes_saved
         precs.append(st.precision)
     return dt, {
         "tp": tp,
@@ -140,6 +150,7 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         "matrix_bytes": mat_bytes,
         "readback_bytes": rb_bytes,
         "fused_launches": fused_launches,
+        "gather_saved": gather_saved,
         "precision_mean": float(np.mean(precs)),
         "precision_std": float(np.std(precs)),
     }

@@ -32,6 +32,15 @@ contiguous blocks fed straight to the §6.3 filter kernel:
     slices are recomputed on demand for verification.  ``discover_many``
     uses the same fused group launch, so requests pruned by the evolving
     bounds never pay for their block of the cross-product matrix;
+  * ``backend='fused-gather'`` (the TPU platform default) additionally
+    fuses the CANDIDATE GATHER into that launch: the kernel scalar-prefetches
+    the CSR posting-list row offsets and DMA-gathers each row block from the
+    device-resident superkey store (``MateIndex.device_store()``, refreshed
+    on §5.4 mutation epochs) straight into VMEM — the host never gathers the
+    candidate superkeys and the gathered rows×lanes block never exists in
+    HBM (``DiscoveryStats.gather_bytes_saved`` counts the traffic avoided).
+    Demotes to 'fused' per launch when the store is over budget or the batch
+    exceeds the scatter-tile table cap;
   * tables are visited in the same descending posting-list order as
     Algorithm 1; rule 1 (global cutoff) applies BETWEEN batches — identical
     pruning guarantee, since the bound only improves as the scan proceeds;
@@ -244,7 +253,10 @@ def _score_tables(
     match matrix was never produced at all.  Surviving tables' hit slices
     are then recomputed on demand from ``row_sk``/``elig`` (same subsumption
     predicate → bit-identical verification inputs); pruned tables cost
-    nothing beyond their 4 count bytes.
+    nothing beyond their 4 count bytes.  On the GATHER-fused path even
+    ``row_sk`` is None — the host never gathered the candidate superkeys —
+    and surviving tables gather just their own slice from the index store
+    (the same ``superkeys`` array every other path reads: bit-identical).
 
     ``rule1=True`` additionally applies the paper's rule 1 inside the range
     (tables are PL-desc sorted → the first at/below the bound prunes the
@@ -255,7 +267,7 @@ def _score_tables(
     ptr = block.table_ptr
     lazy = hits is None
     if lazy:
-        assert row_sk is not None and elig is not None
+        assert elig is not None
     device_hits = (not lazy) and not isinstance(hits, np.ndarray)
     if device_hits:
         bound0 = topk.bound() if topk.full else -1
@@ -281,7 +293,12 @@ def _score_tables(
             stats.tables_pruned_rule2 += 1
             continue
         if lazy:
-            sub = ops.subsume_np(row_sk[lo:hi], plan.q_sk) & elig[lo:hi]
+            rsk = (
+                row_sk[lo:hi]
+                if row_sk is not None
+                else index.superkey_of_rows(rows[lo:hi])
+            )
+            sub = ops.subsume_np(rsk, plan.q_sk) & elig[lo:hi]
             stats.filter_readback_bytes += sub.size
         else:
             sub = np.asarray(hits[lo:hi])
@@ -339,6 +356,14 @@ def discover_batched(
     fl = full_lanes if filter_lanes is None else max(1, min(int(filter_lanes), full_lanes))
     stats.filter_lanes = fl
     q_f = plan.q_sk if fl == full_lanes else plan.q_sk[:, :fl]
+    # gather-fused: the engine decides per batch whether the device store
+    # carries the gather (store fits + the batch is under the scatter-tile
+    # cap), because only then may the host skip its own superkey gather.
+    store = (
+        index.device_store()
+        if bk.gather and ops.gather_store_fits(index.superkeys)
+        else None
+    )
     topk = _TopK(k)
     n_tables = block.n_tables
     for start in range(0, n_tables, batch_tables):
@@ -352,13 +377,29 @@ def discover_batched(
             break
         lo, hi = int(block.table_ptr[start]), int(block.table_ptr[stop])
         rows = block.rows[lo:hi]
-        row_sk = index.superkey_of_rows(rows)
-        row_f = row_sk if fl == full_lanes else row_sk[:, :fl]
+        use_gather = store is not None and (stop - start) <= ops._FUSED_MAX_TABLES
+        # the gather-fused contract: the host NEVER touches the candidate
+        # superkeys — the kernel DMA-gathers them from the device store.
+        row_sk = None if use_gather else index.superkey_of_rows(rows)
+        row_f = (
+            None if row_sk is None
+            else row_sk if fl == full_lanes else row_sk[:, :fl]
+        )
         elig = plan.elig[lo:hi]
         seg = _segment_ids(block.table_ptr, start, stop)
         stats.pl_items_checked += int(rows.shape[0])
         stats.filter_checks += int(elig.sum())
-        if bk.fused:
+        if use_gather:
+            # one launch from posting-list offsets to counts: n×4 offset
+            # bytes go to the device instead of n×lanes×4 gathered key bytes
+            # (and the gathered block never exists in HBM either).
+            hits, counts = ops.filter_hits_table_counts(
+                None, q_f, elig, seg, stop - start, backend=bk,
+                fused_block_n=fused_block_n, store=store, rows=rows,
+            )
+            stats.filter_fused_launches += 1
+            stats.gather_bytes_saved += int(rows.shape[0]) * (fl * 4 - 4)
+        elif bk.fused:
             # fused filter+segment-count launch: the match matrix is never
             # produced (zero filter_matrix_bytes), only the counts vector
             # comes back; surviving tables' slices are recomputed on demand
@@ -414,12 +455,18 @@ class PlanCounts:
     on the fused counts-only path, and always None once cached — see
     ``cacheable``); ``row_sk`` keeps the FULL-width row super keys so a
     dropped/absent matrix is recomputed lazily during scoring,
-    bit-identically.  ``epoch`` pins ``MateIndex.mutation_epoch`` at launch
-    time: a PlanCounts is replayable only while the index is unchanged.
+    bit-identically.  On the GATHER-fused launch ``row_sk`` is None too —
+    the host never gathered the superkeys — and scoring gathers surviving
+    tables' slices from the index store instead, which is why ``epoch``
+    matters doubly there: the store read at scoring time must be the store
+    the launch filtered against.  ``epoch`` pins ``MateIndex.mutation_epoch``
+    at launch time: a PlanCounts is replayable only while the index is
+    unchanged.
     """
 
     plan: QueryPlan
-    row_sk: np.ndarray  # uint32[n_items, lanes] full-width row super keys
+    row_sk: np.ndarray | None  # uint32[n_items, lanes] full-width row super
+    # keys (None: gather-fused launch — scoring reads the index store)
     counts: np.ndarray  # int32[n_tables] per-table eligible-hit counts
     hits: object = None  # np/jnp [n_items, group_keys] slice, or None
     group_keys: int = 0  # key count of the SHARED launch (accounting)
@@ -427,6 +474,7 @@ class PlanCounts:
     fused: bool = False  # counts-only fused launch (no matrix anywhere)
     filter_lanes: int = 0  # lanes the launch probed (< index width: degraded)
     epoch: int = 0  # index.mutation_epoch at launch time
+    gather_saved: int = 0  # HBM bytes the gather-fused launch never moved
 
     def cacheable(self) -> "PlanCounts":
         """A copy safe to hold in a cache: the (possibly device-resident)
@@ -482,12 +530,29 @@ def plan_and_count(
         r_off += ni
         k_off += ki
         n_tables_all += ti
-    row_sk_all = index.superkey_of_rows(rows_all)
-    full_lanes = row_sk_all.shape[1]
+    full_lanes = index.cfg.lanes
     fl = full_lanes if filter_lanes is None else max(1, min(int(filter_lanes), full_lanes))
-    row_f = row_sk_all if fl == full_lanes else row_sk_all[:, :fl]
     q_f = q_all if fl == full_lanes else q_all[:, :fl]
-    if bk.fused:
+    use_gather = (
+        bk.gather
+        and ops.gather_store_fits(index.superkeys)
+        and n_tables_all <= ops._FUSED_MAX_TABLES
+    )
+    # gather-fused group launch: no host superkey gather at all — the kernel
+    # pulls every request's candidate rows from the device store, and phase B
+    # re-gathers only surviving tables' slices (bit-identical: same array).
+    row_sk_all = None if use_gather else index.superkey_of_rows(rows_all)
+    row_f = (
+        None if row_sk_all is None
+        else row_sk_all if fl == full_lanes else row_sk_all[:, :fl]
+    )
+    if use_gather:
+        hits_all, counts_all = ops.filter_hits_table_counts(
+            None, q_f, elig_all, seg_all, n_tables_all,
+            backend=bk, fused_block_n=fused_block_n,
+            store=index.device_store(), rows=rows_all,
+        )
+    elif bk.fused:
         # ONE fused filter+segment-count launch for the whole group: the
         # (Σ rows × Σ keys) matrix is never materialised; only the group
         # counts vector is read back.  Surviving tables recompute their
@@ -517,7 +582,10 @@ def plan_and_count(
         out.append(
             PlanCounts(
                 plan=p,
-                row_sk=row_sk_all[r_off : r_off + ni],
+                row_sk=(
+                    None if row_sk_all is None
+                    else row_sk_all[r_off : r_off + ni]
+                ),
                 counts=counts_all[t_off : t_off + ti],
                 hits=None if hits_all is None
                 else hits_all[r_off : r_off + ni, k_off : k_off + ki],
@@ -526,6 +594,7 @@ def plan_and_count(
                 fused=hits_all is None,
                 filter_lanes=fl,
                 epoch=epoch,
+                gather_saved=ni * (fl * 4 - 4) if use_gather else 0,
             )
         )
         r_off += ni
@@ -564,6 +633,7 @@ def score_from_counts(
     elif pc.fused:  # fused counts-only group launch succeeded
         stats.filter_fused_launches += 1
         stats.filter_readback_bytes += pc.counts.nbytes
+        stats.gather_bytes_saved += pc.gather_saved
     else:
         # the shared launch computes (and reads back) this plan's rows
         # against the GROUP's keys — the documented cross-product trade.

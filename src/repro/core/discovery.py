@@ -44,6 +44,10 @@ class DiscoveryStats:
     # the match matrix was never produced (not even in HBM), so these
     # contribute ZERO to filter_matrix_bytes — counts-only readback plus
     # on-demand recomputed slices for the tables that survive pruning
+    gather_bytes_saved: int = 0  # bytes the gather-fused launches never
+    # moved: the composed path ships n×lanes×4 host-gathered superkey bytes
+    # per launch, the gather-fused kernel ships n×4 offset bytes and pulls
+    # the rows from the device store by DMA (n × (lanes·4 − 4) per launch)
     filter_lanes: int = 0  # uint32 lanes the filter launch probed (0: the
     # scalar engine, which has no lane-sliced filter).  Below the index
     # width this was a DEGRADED launch (serving-tier pressure relief): a

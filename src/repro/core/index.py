@@ -271,6 +271,10 @@ class MateIndex:
         self.postings = _postings_dict(payload, _csr_ptr(counts))
         self._deleted_tables: set[int] = set()
         self._mutations = 0
+        self._device_store = None
+        self._device_store_epoch = -1
+        self._deleted_mask: np.ndarray | None = None
+        self._deleted_mask_epoch = -1
 
     @classmethod
     def _from_build(
@@ -294,6 +298,10 @@ class MateIndex:
         self.postings = _postings_dict(payload, ptr)
         self._deleted_tables = set()
         self._mutations = 0
+        self._device_store = None
+        self._device_store_epoch = -1
+        self._deleted_mask = None
+        self._deleted_mask_epoch = -1
         return self
 
     @property
@@ -309,6 +317,25 @@ class MateIndex:
         while ``mutation_epoch == e`` still holds (``serve.cache`` keys its
         invalidation on this)."""
         return self._mutations
+
+    def device_store(self):
+        """Device-resident per-row superkey store: uint32[total_rows, lanes].
+
+        The gather-fused filter backend DMA-gathers candidate rows from this
+        array inside the kernel, so it must track every §5.4 mutation:
+        the upload is re-done (lazily, on next access) whenever
+        ``mutation_epoch`` moved past the epoch the resident copy was taken
+        at — in-place superkey edits (``delete_table`` zeroing,
+        ``update_cell`` re-hash) bump the epoch too, so a stale device copy
+        can never be served.  Rows stay row-major (each row's lanes
+        contiguous) — the layout the kernel's per-row DMA descriptors need.
+        """
+        if self._device_store is None or self._device_store_epoch != self._mutations:
+            import jax.numpy as jnp
+
+            self._device_store = jnp.asarray(self.superkeys)
+            self._device_store_epoch = self._mutations
+        return self._device_store
 
     # -- online-side hashing --------------------------------------------------
 
@@ -327,12 +354,25 @@ class MateIndex:
         ``[n_keys, |Q|, max_len]`` block and hashed by a single
         ``xash.superkey`` call; baseline hashes fall back to per-unique-value
         hashing + OR.  Bit-identical to hashing each value separately.
+
+        Every key must have the same width (one n-ary query per batch):
+        ragged widths raise ``ValueError`` on BOTH hash paths — the xash
+        branch would otherwise crash (or worse, mis-reshape) in the batched
+        encode, and the baseline OR loop would silently hash a different
+        query than the caller asked for.
         """
         lanes = self.cfg.lanes
         if not keys:
             return np.zeros((0, lanes), dtype=np.uint32)
+        width = len(keys[0])
+        for i, key in enumerate(keys):
+            if len(key) != width:
+                raise ValueError(
+                    f"ragged key widths: key 0 has {width} value(s) but key"
+                    f" {i} has {len(key)} — superkey_of_keys hashes one"
+                    " fixed-width n-ary query key set per call"
+                )
         if self.hash_name == "xash":
-            width = len(keys[0])
             flat = [v for key in keys for v in key]
             enc = encoding.encode_values(flat, self.cfg.max_len)
             enc = enc.reshape(len(keys), width, self.cfg.max_len)
@@ -348,6 +388,24 @@ class MateIndex:
 
     # -- lookups --------------------------------------------------------------
 
+    def _deleted_row_mask(self) -> np.ndarray:
+        """bool[total_rows] — True for rows of tombstoned tables.
+
+        Cached on ``mutation_epoch``: ``fetch_postings`` runs once per value
+        per query, and rebuilding ``list(self._deleted_tables)`` + ``np.isin``
+        there made a delete-heavy lake pay O(values × deleted) on every
+        gather.  The mask costs one O(total_rows) pass per mutation epoch
+        and turns each fetch's tombstone filter into a direct index.
+        """
+        if self._deleted_mask_epoch != self._mutations:
+            mask = np.zeros(self.corpus.total_rows, dtype=bool)
+            rb = self.corpus.row_base
+            for t in self._deleted_tables:
+                mask[int(rb[t]) : int(rb[t + 1])] = True
+            self._deleted_mask = mask
+            self._deleted_mask_epoch = self._mutations
+        return self._deleted_mask
+
     def fetch_postings(self, value: str) -> np.ndarray:
         """PL items for a value: int64[n, 2] of (global_row, col)."""
         vid = self.corpus.value_of.get(value)
@@ -355,9 +413,7 @@ class MateIndex:
             return np.zeros((0, 2), dtype=np.int64)
         pl = self.postings[vid]
         if self._deleted_tables:
-            tids = self.corpus.table_of_row(pl[:, 0])
-            keep = ~np.isin(tids, list(self._deleted_tables))
-            pl = pl[keep]
+            pl = pl[~self._deleted_row_mask()[pl[:, 0]]]
         return pl
 
     def superkey_of_rows(self, global_rows: np.ndarray) -> np.ndarray:

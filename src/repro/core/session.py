@@ -51,9 +51,13 @@ class DiscoveryConfig:
 
     Online phase:
       k            — default top-k per request (per-request override allowed).
-      backend      — filter backend name ('fused' | 'pallas' | 'xla' |
-                     'numpy' | 'auto') or None for registry resolution
-                     (``MATE_FILTER_BACKEND``, then platform default).
+      backend      — filter backend name ('fused-gather' | 'fused' |
+                     'pallas' | 'xla' | 'numpy' | 'auto') or None for
+                     registry resolution (``MATE_FILTER_BACKEND``, then
+                     platform default).  'fused-gather' DMA-gathers the
+                     candidate rows from the device superkey store inside
+                     the fused launch, demoting to 'fused' when the store
+                     doesn't fit the device budget.
       init_mode    — §6.1 initial-column heuristic.
       batch_tables — tables per filter launch in ``discover``.
       fused_block_n — optional row-block override for the fused kernel
@@ -167,6 +171,7 @@ class SessionStats:
     filter_matrix_bytes: int = 0
     filter_readback_bytes: int = 0
     filter_fused_launches: int = 0
+    gather_bytes_saved: int = 0
     # serving-tier counters (bumped by ``serve.engine.DiscoveryEngine``):
     cache_hits: int = 0  # requests answered from the query-result cache
     bound_hits: int = 0  # requests scored from cached PlanCounts (skipped
@@ -183,6 +188,7 @@ class SessionStats:
         self.filter_matrix_bytes += stats.filter_matrix_bytes
         self.filter_readback_bytes += stats.filter_readback_bytes
         self.filter_fused_launches += stats.filter_fused_launches
+        self.gather_bytes_saved += stats.gather_bytes_saved
 
     @property
     def precision(self) -> float:

@@ -22,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_N = 1024
 DEFAULT_BLOCK_Q = 256
@@ -265,6 +266,196 @@ def filter_table_counts(
         interpret=interpret,
     )(*operands)
     return counts, key_counts
+
+
+def _gather_counts_kernel(
+    *refs, lanes: int, has_elig: bool, n_queries: int, block_n: int
+):
+    """Gather-fused filter + segment-count: one launch from posting-list row
+    offsets to per-table counts.
+
+    The candidate rows' super keys are DMA-gathered from the device-resident
+    store (HBM, ``memory_space=ANY``) straight into a VMEM scratch tile using
+    the scalar-prefetched row offsets — the rows×lanes candidate block never
+    exists in HBM, and the host never gathers (or ships) it at all.  The
+    gathered tile then feeds the same subsume ∧ elig → row-sum → one-hot-MXU
+    scatter as ``_table_counts_kernel``.
+
+    Refs (``rows_ref`` is the scalar-prefetch operand; has_elig sets arity):
+      rows_ref:   int32[n]            posting-list row offsets (SMEM)
+      store_ref:  uint32[N, lanes_s]  per-row super-key store (HBM/ANY)
+      query_ref:  uint32[lanes, bq]   query-key super keys (transposed)
+      elig_ref:   int8[bn, bq]        eligibility (only when has_elig)
+      seg_ref:    int32[bn]           table index per row; -1 = padding row
+      counts_ref: int32[tb]           per-table counts (ONE block, all steps)
+      row_vmem:   uint32[bn, lanes_s] gathered super-key scratch tile
+      sem:        DMA semaphore for the gather copies
+
+    Grid is (row blocks, query blocks) with the QUERY axis innermost, the
+    transpose of ``_table_counts_kernel``'s grid: the gather runs once per
+    row block (at ``j == 0``) and the scratch tile is reused across the
+    query-block sweep.  That ordering is only possible because this kernel
+    has no per-key output — per-key counts would need consecutive row steps
+    per query block — so it emits per-table counts alone ('sum' semantics).
+
+    ``lanes`` is the number of lanes PROBED (== the query operand's lane
+    count).  It may be smaller than the store's lane count (the serving
+    tier's lane-prefix degrade): each row DMA still moves the full store row
+    — 16..64 contiguous bytes — but only the first ``lanes`` columns of the
+    scratch tile enter the subsumption test.
+    """
+    if has_elig:
+        rows_ref, store_ref, query_ref, elig_ref, seg_ref, counts_ref = refs[:6]
+        row_vmem, sem = refs[6:]
+    else:
+        rows_ref, store_ref, query_ref, seg_ref, counts_ref = refs[:5]
+        elig_ref = None
+        row_vmem, sem = refs[5:]
+    i = pl.program_id(0)  # row-block index (outer)
+    j = pl.program_id(1)  # query-block index (inner → scratch reuse across j)
+
+    @pl.when(j == 0)
+    def _gather():
+        # one DMA per candidate row: store rows are contiguous [lanes_s]
+        # uint32 runs, so each descriptor moves one aligned 16..64-byte line.
+        # All copies are issued back-to-back, then drained — the per-row
+        # latency overlaps across the outstanding queue.
+        def _start(r, _):
+            idx = rows_ref[i * block_n + r]
+            pltpu.make_async_copy(
+                store_ref.at[pl.ds(idx, 1)], row_vmem.at[pl.ds(r, 1)], sem
+            ).start()
+            return 0
+
+        jax.lax.fori_loop(0, block_n, _start, 0)
+
+        def _wait(r, _):
+            idx = rows_ref[i * block_n + r]
+            pltpu.make_async_copy(
+                store_ref.at[pl.ds(idx, 1)], row_vmem.at[pl.ds(r, 1)], sem
+            ).wait()
+            return 0
+
+        jax.lax.fori_loop(0, block_n, _wait, 0)
+
+    acc = None
+    for lane in range(lanes):
+        r = row_vmem[:, lane]  # [bn]
+        q = query_ref[lane, :]  # [bq]
+        ok = (q[None, :] & ~r[:, None]) == 0  # [bn, bq]
+        acc = ok if acc is None else (acc & ok)
+    if elig_ref is not None:
+        acc = acc & (elig_ref[...] != 0)
+    # mask padded query columns — same phantom-column guard as the non-gather
+    # fused kernel (saturated store rows would otherwise count them).
+    bn_, bq_ = acc.shape
+    col = j * bq_ + jax.lax.broadcasted_iota(jnp.int32, (bn_, bq_), 1)
+    acc = acc & (col < n_queries)
+    seg = seg_ref[...]  # [bn]
+    acc = acc & (seg >= 0)[:, None]  # padding rows contribute nothing
+    per_row = jnp.sum(acc.astype(jnp.int32), axis=1)  # [bn]
+    tb = counts_ref.shape[0]
+    onehot = seg[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, tb), 1
+    )
+    partial = jnp.dot(
+        per_row.astype(jnp.float32)[None, :],
+        onehot.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )[0].astype(jnp.int32)  # [tb]
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_counts():
+        counts_ref[...] = partial
+
+    @pl.when(jnp.logical_or(i != 0, j != 0))
+    def _accum_counts():
+        counts_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_tables", "n_queries", "block_n", "block_q", "interpret"
+    ),
+)
+def gather_filter_table_counts(
+    rows: jnp.ndarray,
+    store: jnp.ndarray,
+    query_sk_t: jnp.ndarray,
+    elig: jnp.ndarray | None,
+    seg_ids: jnp.ndarray,
+    *,
+    n_tables: int,
+    n_queries: int | None = None,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_q: int = DEFAULT_BLOCK_Q,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather-fused filter + per-table segment count.
+
+    One launch from posting-list offsets to counts: ``rows`` (the CSR
+    candidate row ids) is scalar-prefetched, and each grid step DMA-gathers
+    its row block of ``store`` into VMEM before the fused subsume ∧ elig +
+    reduce + scatter — the gathered rows×lanes block never touches HBM.
+
+    Args:
+      rows:       int32[n] row offsets into ``store`` (n divisible by
+                  block_n; padding offsets must be valid, e.g. 0, and carry
+                  seg id -1).
+      store:      uint32[N, lanes_s] device-resident super-key store,
+                  ROW-major (each row's lanes contiguous, one DMA line).
+      query_sk_t: uint32[lanes, q] transposed query super keys (q divisible
+                  by block_q); ``lanes <= lanes_s`` — a strict prefix probes
+                  a lane-degraded filter over the full-width store.
+      elig:       int8[n, q] eligibility, or None for all-eligible.
+      seg_ids:    int32[n] table index per row (-1 for padding rows).
+      n_tables:   padded table count tb (multiple of 128).
+      n_queries:  number of REAL queries (≤ q).
+    Returns:
+      counts int32[tb] — the ONLY output (no per-key counts: the grid runs
+      query-blocks innermost so the gather amortises over them, which rules
+      out the per-key accumulation layout of ``filter_table_counts``).
+    """
+    lanes, q = query_sk_t.shape
+    n = rows.shape[0]
+    assert lanes <= store.shape[1], (lanes, store.shape)
+    n_queries = q if n_queries is None else n_queries
+    grid = (n // block_n, q // block_q)  # query axis INNER → scratch reuse
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),  # store stays in HBM
+        pl.BlockSpec((lanes, block_q), lambda i, j, rows_ref: (0, j)),
+    ]
+    operands = [store, query_sk_t]
+    if elig is not None:
+        in_specs.append(
+            pl.BlockSpec((block_n, block_q), lambda i, j, rows_ref: (i, j))
+        )
+        operands.append(elig)
+    in_specs.append(pl.BlockSpec((block_n,), lambda i, j, rows_ref: (i,)))
+    operands.append(seg_ids)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((n_tables,), lambda i, j, rows_ref: (0,)),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, store.shape[1]), jnp.uint32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _gather_counts_kernel,
+            lanes=lanes,
+            has_elig=elig is not None,
+            n_queries=n_queries,
+            block_n=block_n,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tables,), jnp.int32),
+        interpret=interpret,
+    )(rows, *operands)
 
 
 @functools.partial(

@@ -237,6 +237,19 @@ def _bucket(size: int, minimum: int) -> int:
     return -(-size // _BUCKET_STEP) * _BUCKET_STEP
 
 
+def _check_fused_block_n(block_n: int) -> None:
+    """Validate a user-facing ``fused_block_n`` override.
+
+    A ``ValueError`` (not an ``assert``) so the check also fires under
+    ``python -O`` — the override flows in from ``DiscoveryConfig`` and this
+    message mirrors its ``__post_init__`` wording.
+    """
+    if block_n < 128 or block_n & (block_n - 1):
+        raise ValueError(
+            f"fused_block_n must be a power of two >= 128, got {block_n}"
+        )
+
+
 def filter_match_auto(
     row_sk: np.ndarray | jnp.ndarray,
     query_sk: np.ndarray | jnp.ndarray,
@@ -257,8 +270,8 @@ def filter_match_auto(
     if n == 0 or q == 0:
         return np.zeros((n, q), dtype=bool)
     backend = registry.resolve_backend(backend).name
-    if backend == "fused":
-        backend = "pallas"  # fused has no matrix output; same kernel family
+    if backend in ("fused", "fused-gather"):
+        backend = "pallas"  # fused paths have no matrix output; same family
     if backend == "auto":
         backend = "numpy" if n * q < _MIN_XLA_PROBES else "xla"
     if backend == "numpy":
@@ -348,7 +361,7 @@ def filter_table_counts(
     # so the grid covers every padded row exactly
     budget_n = filter_kernel.fused_block_n(tb)
     if block_n is not None:
-        assert block_n >= 128 and block_n & (block_n - 1) == 0, block_n
+        _check_fused_block_n(block_n)
         budget_n = min(budget_n, block_n)
     block_n = min(nb, budget_n)
     block_q = qb if mode == "any" else min(qb, filter_kernel.DEFAULT_BLOCK_Q)
@@ -379,6 +392,101 @@ def filter_table_counts(
     return np.asarray(counts)[:n_tables]
 
 
+# device superkey stores above this size stay host-resident and the
+# fused-gather backend demotes to the host-gather fused launch — a lake that
+# big should be sharded across hosts (ROADMAP item 1) rather than squeezed
+# into one device's HBM alongside the working set.
+GATHER_STORE_MAX_BYTES = 2 << 30
+
+
+def gather_store_fits(superkeys: np.ndarray | jnp.ndarray) -> bool:
+    """True when the per-row superkey store fits the device-store budget."""
+    return superkeys.nbytes <= GATHER_STORE_MAX_BYTES
+
+
+def gather_filter_table_counts(
+    store: jnp.ndarray,
+    rows: np.ndarray,
+    query_sk: np.ndarray | jnp.ndarray,
+    elig: np.ndarray | None,
+    seg_ids: np.ndarray,
+    n_tables: int,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Gather-fused filter+segment-count launch: posting-list row offsets in,
+    per-table counts out — ONE launch from CSR posting lists to counts.
+
+    The composed path ships n×lanes gathered superkeys through HBM before the
+    filter ever runs; here the kernel scalar-prefetches the (ragged, padded)
+    row offsets and DMA-gathers each row block from the device-resident
+    ``store`` straight into VMEM, so the gathered block never exists in HBM
+    and the host ships n×4 offset bytes instead of n×lanes×4 key bytes.
+
+    Args:
+      store:    uint32[N, lanes_s] device-resident superkey store
+                (``MateIndex.device_store()``), row-major.
+      rows:     int[n] row offsets into ``store`` (the CSR candidate rows).
+      query_sk: uint32[q, lanes] query-key super keys; ``lanes <= lanes_s``
+                probes a lane-prefix degrade over the full-width store.
+      elig:     bool[n, q] eligibility per (item, key), or None.
+      seg_ids:  int32[n] table index (0..n_tables) of each candidate item.
+      n_tables: number of tables covered by this block.
+      block_n:  optional power-of-two row-block override
+                (``DiscoveryConfig.fused_block_n``); clamped to the VMEM
+                budget block, so it can only shrink the tile, never blow it.
+    Returns:
+      int32[n_tables] counts on the host — bit-identical to
+      ``filter_table_counts(store[rows][:, :lanes], ...)`` (mode='sum').
+    """
+    n, q = rows.shape[0], query_sk.shape[0]
+    if n == 0 or q == 0 or n_tables == 0:
+        return np.zeros(n_tables, dtype=np.int32)
+    if n_tables > _FUSED_MAX_TABLES:
+        raise ValueError(
+            f"gather-fused scatter tile supports at most {_FUSED_MAX_TABLES}"
+            f" tables per launch, got {n_tables} — split the batch or use the"
+            " composed path"
+        )
+    interpret = _on_cpu() if interpret is None else interpret
+    nb = _bucket(n, _FALLBACK_MIN_N)
+    qb = _pow2_bucket(q, _FALLBACK_MIN_Q)
+    tb = max(-(-n_tables // 128) * 128, 128)
+    budget_n = filter_kernel.fused_block_n(tb)
+    if block_n is not None:
+        _check_fused_block_n(block_n)
+        budget_n = min(budget_n, block_n)
+    block_n = min(nb, budget_n)
+    block_q = min(qb, filter_kernel.DEFAULT_BLOCK_Q)
+    # padding offsets point at row 0 (always valid); their seg id is -1 so
+    # they scatter nowhere regardless of what row 0's superkey matches.
+    rows_p = np.zeros(nb, dtype=np.int32)
+    rows_p[:n] = rows
+    qry_p = np.full((qb, query_sk.shape[1]), 0xFFFFFFFF, dtype=np.uint32)
+    qry_p[:q] = query_sk
+    seg_p = np.full(nb, -1, dtype=np.int32)
+    seg_p[:n] = seg_ids
+    elig_p = None
+    if elig is not None:
+        elig_p = np.zeros((nb, qb), dtype=np.int8)
+        elig_p[:n, :q] = elig
+        elig_p = jnp.asarray(elig_p)
+    counts = filter_kernel.gather_filter_table_counts(
+        jnp.asarray(rows_p),
+        store,
+        jnp.asarray(qry_p).T,
+        elig_p,
+        jnp.asarray(seg_p),
+        n_tables=tb,
+        n_queries=q,
+        block_n=block_n,
+        block_q=block_q,
+        interpret=interpret,
+    )
+    return np.asarray(counts)[:n_tables]
+
+
 def filter_hits_table_counts(
     row_sk: np.ndarray | jnp.ndarray,
     query_sk: np.ndarray | jnp.ndarray,
@@ -389,6 +497,8 @@ def filter_hits_table_counts(
     use_device: bool = True,
     backend: Backend | str | None = None,
     fused_block_n: int | None = None,
+    store: jnp.ndarray | None = None,
+    rows: np.ndarray | None = None,
 ) -> tuple[np.ndarray | jnp.ndarray | None, np.ndarray]:
     """Device-side inputs for the §6.2 bound checks: eligible filter hits plus
     per-table hit counts, WITHOUT transferring the match matrix to the host.
@@ -403,20 +513,42 @@ def filter_hits_table_counts(
       backend:  resolved ``Backend`` (or name) for this call; None follows
                 the registry precedence (env var, then platform default).
       fused_block_n: optional row-block override for the fused launch.
+      store:    device-resident superkey store for the ``fused-gather``
+                backend (``MateIndex.device_store()``); with ``rows`` set the
+                gather-fused launch replaces ``row_sk`` entirely.
+      rows:     int[n] store row offsets for the gather-fused launch.
     Returns:
       (hits, counts) — ``counts`` int32[n_tables] is the one per-batch host
       readback the rule-1/rule-2 bounds consume.  On the composed XLA/Pallas
       paths ``hits`` bool[n, q] stays device-resident (slice it per surviving
-      table; only those slices are ever read back).  On the FUSED path
+      table; only those slices are ever read back).  On the FUSED paths
       ``hits`` is None: the match matrix was never produced at all — callers
-      recompute the (few) surviving tables' slices on demand.
+      recompute the (few) surviving tables' slices on demand.  ``row_sk`` may
+      be None when ``store``+``rows`` are given (the gather-fused contract:
+      the host never gathers the candidate superkeys); a demotion off the
+      gather path then materialises them from the device store.
     """
-    n, q = row_sk.shape[0], query_sk.shape[0]
+    n = rows.shape[0] if row_sk is None else row_sk.shape[0]
+    q = query_sk.shape[0]
     if n == 0 or q == 0 or n_tables == 0:
         return np.zeros((n, q), dtype=bool), np.zeros(n_tables, dtype=np.int32)
     if not use_device:
         backend = "numpy"
     backend = registry.resolve_backend(backend).name
+    if backend == "fused-gather":
+        if store is not None and rows is not None and n_tables <= _FUSED_MAX_TABLES:
+            counts = gather_filter_table_counts(
+                store, rows, query_sk, elig, seg_ids, n_tables,
+                block_n=fused_block_n,
+            )
+            return None, counts
+        # no device store (or the scatter tile would blow VMEM): demote to
+        # the host-gather fused launch, which shares the cap fallback below
+        backend = "fused"
+    if row_sk is None:
+        # demoted off the gather path without host superkeys: gather them
+        # from the device store (rare — cap overflow or store missing).
+        row_sk = np.asarray(store)[np.asarray(rows)][:, : query_sk.shape[1]]
     if backend == "fused" and n_tables > _FUSED_MAX_TABLES:
         backend = "pallas"  # scatter tile would blow VMEM; composed oracle
     if backend == "fused":

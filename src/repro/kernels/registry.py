@@ -11,8 +11,10 @@ distributed filter.  This module centralises all of it:
 
         explicit config  >  MATE_FILTER_BACKEND env var  >  platform default
 
-    (platform default: ``fused`` on TPU — the roofline path — and ``auto``
-    everywhere else, where ``auto`` is the size-based numpy/XLA split).
+    (platform default: ``fused-gather`` on TPU — the roofline path, demoting
+    to ``fused`` when the device superkey store is absent or over budget —
+    and ``auto`` everywhere else, where ``auto`` is the size-based numpy/XLA
+    split).
   * ``register_backend`` — the extension point; the built-in table covers
     the four §6.3 filter implementations plus ``auto``.
 
@@ -39,6 +41,7 @@ class BackendSpec:
     description: str
     fused: bool = False  # counts-only launch; match matrix never exists
     device: bool = True  # launches device work (False: host numpy oracle)
+    gather: bool = False  # DMA-gathers rows from the device superkey store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +68,10 @@ class Backend:
     def device(self) -> bool:
         return self.spec.device
 
+    @property
+    def gather(self) -> bool:
+        return self.spec.gather
+
     def __str__(self) -> str:  # noqa: DunderStr — used in bench rows/logs
         return self.name
 
@@ -83,6 +90,12 @@ def register_backend(spec: BackendSpec) -> BackendSpec:
 register_backend(BackendSpec(
     "fused", "fused filter+segment-count Pallas kernel (counts-only readback;"
     " interpret mode off-TPU)", fused=True,
+))
+register_backend(BackendSpec(
+    "fused-gather", "gather-fused Pallas kernel: DMA-gathers candidate rows"
+    " from the device superkey store inside the fused counts-only launch"
+    " (demotes to 'fused' when the store is absent or over budget;"
+    " interpret mode off-TPU)", fused=True, gather=True,
 ))
 register_backend(BackendSpec(
     "pallas", "composed Pallas filter_kernel + XLA segment-sum"
@@ -107,7 +120,7 @@ def backend_names() -> tuple[str, ...]:
 def platform_default(platform: str | None = None) -> str:
     """Backend name a platform defaults to when nothing is pinned."""
     platform = platform or jax.default_backend()
-    return "fused" if platform == "tpu" else "auto"
+    return "fused-gather" if platform == "tpu" else "auto"
 
 
 def resolve_backend(

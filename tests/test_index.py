@@ -195,6 +195,50 @@ def test_superkey_of_keys_matches_per_value_or():
         assert xash.lanes_to_int(got[i]) == want
 
 
+@pytest.mark.parametrize("hash_name", ["xash", "murmur"])
+def test_superkey_of_keys_ragged_widths_raise(hash_name):
+    """Regression: a ragged n-ary key list used to crash in the xash
+    branch's reshape and silently mis-hash on the baseline OR path — both
+    branches must raise the same clear ValueError."""
+    idx = MateIndex(small_corpus(), hash_name=hash_name)
+    with pytest.raises(ValueError, match="ragged key widths"):
+        idx.superkey_of_keys([("uk", "cambridge"), ("japan",)])
+    with pytest.raises(ValueError, match="key 2 has 3"):
+        idx.superkey_of_keys([("uk",), ("japan",), ("uk", "oxford", "z")])
+    # uniform widths (any width) still hash fine
+    assert idx.superkey_of_keys([("uk",), ("japan",)]).shape == (2, idx.cfg.lanes)
+
+
+def test_fetch_postings_deleted_mask_cached_on_epoch():
+    """The tombstone filter uses a deleted-row mask cached on
+    mutation_epoch — behavior-neutral vs the old per-fetch np.isin, and
+    rebuilt exactly once per epoch even under delete-heavy fetch storms."""
+    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=40, seed=11))
+    idx = MateIndex(corpus)
+    victims = list(range(0, 40, 3))  # delete-heavy: 14 tombstoned tables
+    for t in victims:
+        idx.delete_table(t)
+    epoch = idx.mutation_epoch
+    for value in list(idx.corpus.value_of)[:200]:
+        got = idx.fetch_postings(value)
+        # the replaced per-fetch semantics: isin against the tombstone set
+        vid = idx.corpus.value_of.get(value)
+        pl = idx.postings.get(vid, np.zeros((0, 2), np.int64))
+        if len(pl):
+            tids = idx.corpus.table_of_row(pl[:, 0])
+            pl = pl[~np.isin(tids, list(idx._deleted_tables))]
+        assert np.array_equal(got, pl), value
+    # the mask was built once for the whole storm, keyed on the epoch
+    assert idx._deleted_mask_epoch == epoch
+    mask = idx._deleted_mask
+    idx.fetch_postings(next(iter(idx.corpus.value_of)))
+    assert idx._deleted_mask is mask  # no rebuild within an epoch
+    idx.delete_table(39)  # epoch bump → next fetch rebuilds
+    idx.fetch_postings(next(iter(idx.corpus.value_of)))
+    assert idx._deleted_mask is not mask
+    assert idx._deleted_mask_epoch == idx.mutation_epoch
+
+
 def test_corpus_char_frequencies():
     corpus = small_corpus()
     freq = corpus.char_frequencies()

@@ -29,9 +29,9 @@ def test_precedence_platform_default(monkeypatch):
     monkeypatch.delenv(ENV, raising=False)
     bk = registry.resolve_backend(None)
     assert bk.name == registry.platform_default() and bk.source == "platform"
-    assert registry.platform_default("tpu") == "fused"
+    assert registry.platform_default("tpu") == "fused-gather"
     assert registry.platform_default("cpu") == "auto"
-    assert registry.resolve_backend(None, platform="tpu").name == "fused"
+    assert registry.resolve_backend(None, platform="tpu").name == "fused-gather"
 
 
 def test_resolved_backend_passes_through():
@@ -55,8 +55,13 @@ def test_backend_properties():
     assert not Backend("numpy").device
     assert str(Backend("xla")) == "xla"
     assert set(registry.backend_names()) == {
-        "fused", "pallas", "xla", "numpy", "auto"
+        "fused", "fused-gather", "pallas", "xla", "numpy", "auto"
     }
+    # fused-gather is a fused backend (counts-only) that ALSO gathers on
+    # device; plain fused must not claim the gather capability
+    gb = Backend("fused-gather")
+    assert gb.fused and gb.device and gb.gather
+    assert not Backend("fused").gather
 
 
 def test_register_backend_rejects_duplicates():
@@ -77,6 +82,9 @@ def test_shard_impl_mapping(monkeypatch):
     assert distributed.shard_impl_for("broadcast") == "broadcast"
     assert distributed.shard_impl_for("fused") == "fused"
     assert distributed.shard_impl_for(Backend("fused")) == "fused"
+    # gather-fused is a fused-family backend: the sharded filter runs its
+    # fused (host-gather) shard impl — per-shard device stores are item 1
+    assert distributed.shard_impl_for(Backend("fused-gather")) == "fused"
     assert distributed.shard_impl_for(Backend("xla")) == "broadcast"
     monkeypatch.setenv(ENV, "fused")
     assert distributed.shard_impl_for(None) == "fused"

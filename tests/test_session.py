@@ -23,7 +23,7 @@ from repro.data import synthetic
 from repro.serve.engine import DiscoveryEngine
 from repro.kernels.registry import Backend
 
-BACKENDS = ("numpy", "xla", "pallas", "fused")
+BACKENDS = ("numpy", "xla", "pallas", "fused", "fused-gather")
 
 
 @pytest.fixture(scope="module")
@@ -121,9 +121,15 @@ def test_session_discover_bit_identical(sessions, lake, bits, backend):
     assert _key(got) == _key(ref)
     old, _ = discover_batched(session.index, query, q_cols, k=10, backend=backend)
     assert _key(got) == _key(old)
-    if backend == "fused":
+    if backend in ("fused", "fused-gather"):
         assert stats.filter_matrix_bytes == 0
         assert stats.filter_fused_launches > 0
+    if backend == "fused-gather":
+        # the host never gathered the candidate superkeys: every launch
+        # saved n × (lanes·4 − 4) bytes of gather traffic
+        assert stats.gather_bytes_saved > 0
+    else:
+        assert stats.gather_bytes_saved == 0
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
@@ -151,6 +157,70 @@ def test_session_stats_accumulate(sessions, lake):
     assert session.stats.requests == 3
     assert session.stats.filter_checks > 0
     assert 0.0 <= session.stats.precision <= 1.0
+
+
+def test_ops_fused_block_n_rejects_bad_override():
+    """The ops-level override check is a ValueError with the same wording as
+    DiscoveryConfig.__post_init__ — it used to be a bare assert, which a
+    ``python -O`` run silently skipped, letting a non-pow2 block reach the
+    kernel."""
+    from repro.kernels import ops
+
+    row = np.zeros((4, 4), dtype=np.uint32)
+    qk = np.zeros((2, 4), dtype=np.uint32)
+    seg = np.zeros(4, dtype=np.int32)
+    for bad in (100, 384, 64):
+        with pytest.raises(
+            ValueError,
+            match=rf"fused_block_n must be a power of two >= 128, got {bad}",
+        ):
+            ops.filter_table_counts(row, qk, None, seg, 2, block_n=bad)
+        with pytest.raises(ValueError, match="power of two >= 128"):
+            ops.gather_filter_table_counts(
+                jnp_store(), np.zeros(4, np.int64), qk, None, seg, 2,
+                block_n=bad,
+            )
+
+
+def jnp_store():
+    import jax.numpy as jnp
+
+    return jnp.zeros((8, 4), dtype=jnp.uint32)
+
+
+def test_ops_fused_block_n_validates_under_python_O():
+    """Regression for the bare-assert bug: the check must still fire with
+    assertions compiled out (``python -O``)."""
+    import os
+    import subprocess
+    import sys
+
+    script = (
+        "import numpy as np\n"
+        "from repro.kernels import ops\n"
+        "row = np.zeros((4, 4), dtype=np.uint32)\n"
+        "qk = np.zeros((2, 4), dtype=np.uint32)\n"
+        "seg = np.zeros(4, dtype=np.int32)\n"
+        "try:\n"
+        "    ops.filter_table_counts(row, qk, None, seg, 2, block_n=100)\n"
+        "except ValueError as e:\n"
+        "    ok = 'fused_block_n must be a power of two >= 128, got 100' in str(e)\n"
+        "    print('OK' if ok else 'WRONG-MESSAGE:' + str(e))\n"
+        "else:\n"
+        "    print('NO-ERROR')\n"
+    )
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-O", "-c", script],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == "OK", (proc.stdout, proc.stderr)
 
 
 def test_session_fused_block_n_override(sessions, lake):
