@@ -157,6 +157,30 @@ def engines():
         f"gather_bytes_saved={stg['gather_saved']}",
         backend="fused-gather",  # run_discovery pins backend='fused-gather'
     )
+    # routed lake (4 shards): shard-local launches + count-only merge.  The
+    # structural claims the gate checks: bit-identical top-k to the
+    # single-host engine, and the ONLY cross-shard traffic is the int32
+    # count vectors — route_bytes ≪ the superkey bytes a host-gather ships.
+    ridx = common.routed_index(4, 128)
+    common.run_discovery(ridx, queries, engine="batched")  # warm
+    identical = int(
+        all(
+            [(e.table_id, e.joinability) for e in discover_batched(
+                ridx, q, c, k=common.K)[0]]
+            == [(e.table_id, e.joinability) for e in discover_batched(
+                idx, q, c, k=common.K)[0]]
+            for q, c in queries
+        )
+    )
+    t_rt, strt = common.run_discovery(ridx, queries, engine="batched")
+    host_gather_bytes = strt["items_checked"] * ridx.cfg.lanes * 4
+    common.emit(
+        "engine/mate_batched_routed", t_rt / n * 1e6,
+        f"vs_batched={t_bat/t_rt:.2f}x;identical={identical};"
+        f"shard_launches={strt['shard_launches']};"
+        f"route_bytes_merged={strt['route_bytes']};"
+        f"route_frac={strt['route_bytes']/max(host_gather_bytes,1):.4f}",
+    )
 
 
 def main():

@@ -58,6 +58,19 @@ def index(hash_name: str = "xash", bits: int = 128, **xash_kw):
 
 
 @lru_cache(maxsize=None)
+def routed_index(n_shards: int = 4, bits: int = 128):
+    """Routed lake over the bench corpus: per-shard ownership, shard-local
+    launches, count-only merge (``core.routing.ShardedMateIndex``)."""
+    from repro.core.routing import ShardedMateIndex
+
+    c = corpus()
+    cfg = xash.XashConfig(
+        bits=bits, char_freq=tuple(c.char_frequencies().tolist())
+    )
+    return ShardedMateIndex(c, cfg=cfg, n_shards=n_shards)
+
+
+@lru_cache(maxsize=None)
 def query_group(n_rows: int, key_width: int = 2):
     return tuple(
         synthetic.make_mixed_queries(
@@ -132,6 +145,9 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
     dt = time.perf_counter() - t0
     fused_launches = 0
     gather_saved = 0
+    shard_launches = 0
+    route_bytes = 0
+    items_checked = 0
     for st in stats:
         tp += st.verified_tp
         fp += st.verified_fp
@@ -141,6 +157,9 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         rb_bytes += st.filter_readback_bytes
         fused_launches += st.filter_fused_launches
         gather_saved += st.gather_bytes_saved
+        shard_launches += st.shard_launches
+        route_bytes += st.route_bytes_merged
+        items_checked += st.pl_items_checked
         precs.append(st.precision)
     return dt, {
         "tp": tp,
@@ -151,6 +170,9 @@ def run_discovery(idx, queries, k=K, row_filter=True, engine="seq"):
         "readback_bytes": rb_bytes,
         "fused_launches": fused_launches,
         "gather_saved": gather_saved,
+        "shard_launches": shard_launches,
+        "route_bytes": route_bytes,
+        "items_checked": items_checked,
         "precision_mean": float(np.mean(precs)),
         "precision_std": float(np.std(precs)),
     }

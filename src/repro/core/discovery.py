@@ -54,6 +54,17 @@ class DiscoveryStats:
     # lane-prefix subsumption test is a pure relaxation — no false
     # negatives — so exact verification still yields bit-identical top-k,
     # just with more survivors to verify.
+    # routed-index accounting (``core.routing.ShardedMateIndex``): the only
+    # bytes that cross a shard boundary on the routed path are per-table
+    # count vectors — superkey rows never do (owning-shard launches +
+    # owning-shard re-gathers for verification).
+    shard_launches: int = 0  # shard-local filter launches the routed path ran
+    route_bytes_merged: int = 0  # per-table count bytes merged across shards
+    # (the ENTIRE cross-shard traffic of a routed filter; compare against
+    # n_items × lanes × 4, the superkey bytes a host-gather path would ship)
+    shard_gather_demotions: int = 0  # shard launches demoted off the
+    # gather-fused path (store over budget / scatter-tile cap / no per-shard
+    # store, e.g. the pre-routed mesh row filter) — each is also debug-logged
 
     @property
     def readback_frac(self) -> float:
@@ -190,7 +201,7 @@ def discover(
         # measurement with interpreter overhead).  Rule-2 bookkeeping below
         # consumes the precomputed matches in the paper's original order.
         rows_arr = np.fromiter((g for g, _c, _v in table_pls), np.int64, l_t)
-        row_sks = index.superkeys[rows_arr]  # [L, lanes]
+        row_sks = index.superkey_of_rows(rows_arr)  # [L, lanes]
         if row_filter:
             for _g, _c, value in table_pls:
                 stats.filter_checks += len(keys_of_value[value])

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import registry
 from repro.kernels.registry import Backend
+
+_LOG = logging.getLogger(__name__)
 
 # jax.shard_map landed after 0.4.x; fall back to the experimental home
 _shard_map = getattr(jax, "shard_map", None)
@@ -164,7 +167,7 @@ _FILTER_IMPLS = {
     "fused": filter_counts_local_fused,
 }
 
-def shard_impl_for(backend: Backend | str | None) -> str:
+def shard_impl_for(backend: Backend | str | None, stats=None) -> str:
     """Map a resolved filter ``Backend`` onto a per-shard impl name.
 
     A shard-impl name ('broadcast' | 'blocked' | 'fused') passes through
@@ -174,10 +177,29 @@ def shard_impl_for(backend: Backend | str | None) -> str:
     never exists per shard here).  None follows the registry precedence, so
     ``MATE_FILTER_BACKEND=fused`` and the TPU platform default select the
     fused shard launch without any caller plumbing.
+
+    A 'fused-gather' backend DEMOTES to the fused shard impl here — and says
+    so: this mesh row-filter API receives pre-gathered, pre-sharded superkey
+    blocks, so there is no posting-list gather left to fuse.  The demotion is
+    debug-logged and counted on ``stats`` (a ``DiscoveryStats``) when one is
+    passed; the path that runs gather-fused WITHOUT demotion is the routed
+    index (``core.routing.ShardedMateIndex``), whose per-shard epoch-pinned
+    device stores give the gather kernel something shard-local to gather
+    from.
     """
     if isinstance(backend, str) and backend in _FILTER_IMPLS:
         return backend
     bk = registry.resolve_backend(backend)
+    if bk.gather:
+        _LOG.debug(
+            "shard_impl_for: demoting %r to the 'fused' shard impl — the"
+            " mesh row filter takes pre-gathered superkey shards (use a"
+            " routed ShardedMateIndex for shard-local gather-fused launches)",
+            bk.name,
+        )
+        if stats is not None:
+            stats.shard_gather_demotions += 1
+        return "fused"
     return "fused" if bk.fused else "broadcast"
 
 
@@ -215,6 +237,184 @@ def make_distributed_filter(
         return tc, kc
 
     return jax.jit(_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Routed-index mesh filter (core.routing.ShardedMateIndex, mesh mode)
+# ---------------------------------------------------------------------------
+
+
+def _routed_local_counts_fn(
+    row_axes, n_shards, pad_store, pad_items, qb, q, fl, n_tables, impl: str,
+):
+    """Build the jitted shard_map'd routed filter for one shape bucket.
+
+    Inputs (leading dim sharded over ``row_axes``, one block per shard):
+      store  uint32[n_shards·pad_store, lanes] — per-shard superkey stores
+      rows   int32[n_shards·pad_items]         — SHARD-LOCAL row offsets
+      seg    int32[n_shards·pad_items]         — batch table ids (-1 pads)
+      elig   int8[n_shards·pad_items, qb]      — eligibility (0 pads)
+      qry    uint32[qb, fl] (replicated)       — query superkeys
+    Output: int32[n_tables], psum'ed — per-table counts, replicated.
+
+    Each shard gathers ONLY from its own store block and the single
+    cross-shard exchange is the counts psum: superkey rows never leave
+    their shard.  ``impl`` 'fused' runs the Pallas fused counts kernel per
+    shard (mode='sum'); 'xla' is the lane-unrolled fallback — bit-identical
+    counts either way.
+    """
+    from repro.kernels import filter_kernel
+
+    def _local(store, rows, seg, elig, qry):
+        sk = store[rows][:, :fl]
+        if impl == "fused":
+            interpret = jax.default_backend() != "tpu"
+            tb = max(-(-n_tables // 128) * 128, 128)
+            block_n = min(pad_items, filter_kernel.fused_block_n(tb))
+            block_q = min(qb, filter_kernel.DEFAULT_BLOCK_Q)
+            counts, _ = filter_kernel.filter_table_counts(
+                sk.T, qry.T, elig, seg,
+                n_tables=tb, n_queries=q, block_n=block_n, block_q=block_q,
+                mode="sum", interpret=interpret,
+            )
+            counts = counts[:n_tables]
+        else:
+            ok = None
+            for lane in range(fl):
+                c = (qry[None, :, lane] & ~sk[:, lane : lane + 1]) == 0
+                ok = c if ok is None else ok & c
+            ok = ok & (elig > 0)
+            per_row = jnp.sum(ok, axis=1).astype(jnp.int32)
+            counts = (
+                jnp.zeros((n_tables,), jnp.int32)
+                .at[jnp.maximum(seg, 0)]
+                .add(jnp.where(seg >= 0, per_row, 0))
+            )
+        return jax.lax.psum(counts, row_axes)
+
+    def wrap(mesh):
+        extra = _no_rep_check_kwargs() if impl == "fused" else {}
+        return jax.jit(
+            _shard_map(
+                _local,
+                mesh=mesh,
+                in_specs=(
+                    P(row_axes), P(row_axes), P(row_axes), P(row_axes), P()
+                ),
+                out_specs=P(),
+                **extra,
+            )
+        )
+
+    return wrap
+
+
+def _routed_mesh_store(index):
+    """The stacked equal-padded per-shard store blocks, device_put with the
+    shard partitioning — cached on the tuple of PER-SHARD epochs, so a §5.4
+    mutation on shard i re-uploads the stack once, lazily."""
+    epochs = tuple(s.mutation_epoch for s in index.shards)
+    cached = index._mesh_store_cache
+    if cached is not None and cached[0] == epochs:
+        return cached[1], cached[2]
+    pad_store = max(max(s.n_rows for s in index.shards), 1)
+    lanes = index.cfg.lanes
+    stack = np.zeros((index.n_shards * pad_store, lanes), dtype=np.uint32)
+    for i, s in enumerate(index.shards):
+        stack[i * pad_store : i * pad_store + s.n_rows] = s.superkeys
+    sharding = NamedSharding(index._mesh, P(index._row_axes))
+    store = jax.device_put(stack, sharding)
+    index._mesh_store_cache = (epochs, store, pad_store)
+    return store, pad_store
+
+
+def routed_filter_counts_mesh(
+    index,
+    rows: np.ndarray,
+    query_sk: np.ndarray,
+    elig: np.ndarray,
+    seg_ids: np.ndarray,
+    n_tables: int,
+    backend: Backend | str | None = None,
+) -> tuple[np.ndarray, bool]:
+    """One shard_map launch of the routed filter over ``index``'s mesh.
+
+    Partitions the batch's candidate items by owning shard, pads each
+    shard's slice to a shared pow2 bucket, and runs the per-shard filter +
+    counts psum as a single SPMD program.  Returns ``(counts, demoted)``:
+    ``counts`` int32[n_tables] bit-identical to the host-routed (and
+    single-host) counts; ``demoted`` True when a fused/gather backend fell
+    back to the lane-unrolled XLA shard body (Pallas unavailable under this
+    mesh — logged, counted by the caller on ``DiscoveryStats``).
+    """
+    from repro.kernels import ops
+
+    bk = registry.resolve_backend(backend)
+    mesh, row_axes = index._mesh, index._row_axes
+    n_shards = index.n_shards
+    rows = np.asarray(rows, dtype=np.int64)
+    n, q = rows.shape[0], query_sk.shape[0]
+    fl = query_sk.shape[1]
+    sid = index._shard_ids_of_rows(rows)
+    store, pad_store = _routed_mesh_store(index)
+
+    per_shard = [np.nonzero(sid == s)[0] for s in range(n_shards)]
+    max_items = max((len(ix) for ix in per_shard), default=0)
+    pad_items = ops._bucket(max(max_items, 1), ops._FALLBACK_MIN_N)
+    qb = ops._pow2_bucket(q, ops._FALLBACK_MIN_Q)
+
+    rows_p = np.zeros(n_shards * pad_items, dtype=np.int32)
+    seg_p = np.full(n_shards * pad_items, -1, dtype=np.int32)
+    elig_p = np.zeros((n_shards * pad_items, qb), dtype=np.int8)
+    for s, ix in enumerate(per_shard):
+        if not len(ix):
+            continue
+        base = s * pad_items
+        rows_p[base : base + len(ix)] = rows[ix] - index.shards[s].row_lo
+        seg_p[base : base + len(ix)] = np.asarray(seg_ids)[ix]
+        elig_p[base : base + len(ix), :q] = elig[ix]
+    qry_p = np.full((qb, fl), 0xFFFFFFFF, dtype=np.uint32)
+    qry_p[:q] = query_sk
+
+    from repro.kernels import filter_kernel
+
+    fused_capable = bk.fused or bk.gather
+    want_fused = fused_capable and (
+        max(-(-n_tables // 128) * 128, 128) <= filter_kernel.FUSED_MAX_TABLES
+    )
+    demoted = bool(index._mesh_filter_cache.get("__demoted__", False))
+    impls = ["xla"] if (demoted or not want_fused) else ["fused", "xla"]
+    sharding = NamedSharding(mesh, P(row_axes))
+    args = (
+        store,
+        jax.device_put(rows_p, sharding),
+        jax.device_put(seg_p, sharding),
+        jax.device_put(elig_p, sharding),
+        jnp.asarray(qry_p),
+    )
+    for impl in impls:
+        key = (pad_store, pad_items, qb, q, fl, n_tables, impl)
+        fn = index._mesh_filter_cache.get(key)
+        if fn is None:
+            fn = _routed_local_counts_fn(
+                row_axes, n_shards, pad_store, pad_items, qb, q, fl,
+                n_tables, impl,
+            )(mesh)
+            index._mesh_filter_cache[key] = fn
+        try:
+            counts = np.asarray(fn(*args))
+            return counts, fused_capable and impl != "fused"
+        except Exception:  # pragma: no cover - backend-dependent compile path
+            if impl == "xla":
+                raise
+            _LOG.debug(
+                "routed mesh filter: fused shard body failed to compile on"
+                " %s — demoting to the XLA shard body",
+                jax.default_backend(), exc_info=True,
+            )
+            index._mesh_filter_cache["__demoted__"] = True
+            demoted = True
+    raise AssertionError("unreachable")  # pragma: no cover
 
 
 # ---------------------------------------------------------------------------

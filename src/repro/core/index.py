@@ -132,6 +132,32 @@ def _shard_postings(
     return payload, counts
 
 
+def _intern_value(index, value: str) -> int:
+    """Resolve ``value`` in the corpus value arena, interning (and hashing)
+    it if new — the shared §5.4 mutation primitive.  ``index`` is anything
+    with ``corpus``/``cfg``/``hash_name``/``value_lanes`` (``MateIndex`` or
+    ``routing.ShardedMateIndex``, whose value arena is replicated)."""
+    corpus = index.corpus
+    vid = corpus.value_of.get(value)
+    if vid is not None:
+        return vid
+    vid = len(corpus.unique_values)
+    corpus.value_of[value] = vid
+    corpus.unique_values.append(value)
+    new_enc = encoding.encode_values([value], corpus.max_len)
+    corpus.unique_enc = np.concatenate([corpus.unique_enc, new_enc])
+    index.value_lanes = np.concatenate(
+        [
+            index.value_lanes,
+            _hash_unique_values(
+                [value], new_enc, index.cfg, index.hash_name,
+                corpus.avg_row_width(),
+            ),
+        ]
+    )
+    return vid
+
+
 def _csr_ptr(counts: np.ndarray) -> np.ndarray:
     ptr = np.zeros(len(counts) + 1, dtype=np.int64)
     np.cumsum(counts, out=ptr[1:])
@@ -526,22 +552,7 @@ class MateIndex:
         corpus = self.corpus
         grow = int(corpus.row_base[table_id]) + row
         old_vid = int(corpus.cell_value_ids[grow, col])
-        vid = corpus.value_of.get(value)
-        if vid is None:
-            vid = len(corpus.unique_values)
-            corpus.value_of[value] = vid
-            corpus.unique_values.append(value)
-            new_enc = encoding.encode_values([value], corpus.max_len)
-            corpus.unique_enc = np.concatenate([corpus.unique_enc, new_enc])
-            self.value_lanes = np.concatenate(
-                [
-                    self.value_lanes,
-                    _hash_unique_values(
-                        [value], new_enc, self.cfg, self.hash_name,
-                        corpus.avg_row_width(),
-                    ),
-                ]
-            )
+        vid = _intern_value(self, value)
         corpus.tables[table_id].cells[row][col] = value
         corpus.cell_value_ids[grow, col] = vid
         # postings: drop old item, add new

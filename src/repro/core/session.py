@@ -172,6 +172,11 @@ class SessionStats:
     filter_readback_bytes: int = 0
     filter_fused_launches: int = 0
     gather_bytes_saved: int = 0
+    # routed-index counters (``core.routing.ShardedMateIndex`` sessions):
+    shard_launches: int = 0  # shard-local filter launches routed to the data
+    route_bytes_merged: int = 0  # cross-shard count-merge bytes (the ONLY
+    # bytes that cross a shard boundary on the routed filter path)
+    shard_gather_demotions: int = 0  # shard launches demoted off gather-fused
     # serving-tier counters (bumped by ``serve.engine.DiscoveryEngine``):
     cache_hits: int = 0  # requests answered from the query-result cache
     bound_hits: int = 0  # requests scored from cached PlanCounts (skipped
@@ -189,6 +194,9 @@ class SessionStats:
         self.filter_readback_bytes += stats.filter_readback_bytes
         self.filter_fused_launches += stats.filter_fused_launches
         self.gather_bytes_saved += stats.gather_bytes_saved
+        self.shard_launches += stats.shard_launches
+        self.route_bytes_merged += stats.route_bytes_merged
+        self.shard_gather_demotions += stats.shard_gather_demotions
 
     @property
     def precision(self) -> float:
@@ -230,6 +238,7 @@ class MateSession:
         mesh=None,
         row_axes: tuple[str, ...] | None = None,
         n_shards: int | None = None,
+        distributed: bool = False,
     ) -> "MateSession":
         """Offline phase (§4/§5): hash + index ``corpus`` per ``config``.
 
@@ -241,17 +250,39 @@ class MateSession:
         count.  One device (or no mesh) falls back to the single-host pass;
         ``n_shards`` optionally splits the host passes without a mesh.
         Accounting lands in ``session.build_stats`` (a ``BuildStats``).
+
+        ``distributed=True`` skips the merge entirely and keeps the index
+        ROUTED (``core.routing.ShardedMateIndex``): each shard's postings
+        and superkeys stay resident where they were built (per-shard
+        epoch-pinned device stores), the online filter runs shard-locally
+        and only per-table counts cross shards — same top-k, bit-identical,
+        with ``SessionStats.route_bytes_merged``/``shard_launches`` proving
+        the traffic shape.  §5.4 mutations through this session then apply
+        shard-locally too (one shard's epoch bumps, one store refreshes).
         """
         config = config or DiscoveryConfig()
-        index, build_stats = index_lib.build_index(
-            corpus,
-            cfg=xash.XashConfig(bits=config.bits),
-            hash_name=config.hash_name,
-            use_corpus_char_freq=config.use_corpus_char_freq,
-            mesh=mesh,
-            row_axes=row_axes,
-            n_shards=n_shards,
-        )
+        if distributed:
+            from repro.core import routing
+
+            index, build_stats = routing.build_routed_index(
+                corpus,
+                cfg=xash.XashConfig(bits=config.bits),
+                hash_name=config.hash_name,
+                use_corpus_char_freq=config.use_corpus_char_freq,
+                mesh=mesh,
+                row_axes=row_axes,
+                n_shards=n_shards,
+            )
+        else:
+            index, build_stats = index_lib.build_index(
+                corpus,
+                cfg=xash.XashConfig(bits=config.bits),
+                hash_name=config.hash_name,
+                use_corpus_char_freq=config.use_corpus_char_freq,
+                mesh=mesh,
+                row_axes=row_axes,
+                n_shards=n_shards,
+            )
         session = cls(index, config)
         session.build_stats = build_stats
         return session

@@ -20,6 +20,16 @@ over an N-device mesh (``MateSession.build(..., mesh=...)`` — unique-value
 hashing under shard_map, host-side posting merge), forcing N virtual CPU
 devices for a dry run when the host has fewer.  The build is byte-identical
 to the single-host pass; the driver prints the ``BuildStats`` breakdown.
+
+``--route-shards N`` builds a ROUTED lake on top: a ``ShardedMateIndex``
+(``MateSession.build(..., distributed=True, n_shards=N)``) that keeps each
+shard's postings, superkeys, and device store resident where the shard was
+built and routes every query to the data — only int32 per-table count
+vectors cross a shard boundary.  The driver replays the same queries
+through the routed session, asserts bit-identical top-k against the
+single-host engines, and prints the cross-shard traffic
+(``route_bytes_merged``) next to the superkey bytes a host-gather path
+would have shipped.
 """
 
 from __future__ import annotations
@@ -75,17 +85,23 @@ def main(argv=None):
                     help="shard the offline index build over an N-device mesh "
                          "(forces N virtual CPU devices when the host has "
                          "fewer and jax is not yet initialised)")
+    ap.add_argument("--route-shards", type=int, default=0, metavar="N",
+                    help="also build an N-shard routed lake "
+                         "(ShardedMateIndex) and replay the queries through "
+                         "it: shard-local filter launches, count-only merge, "
+                         "bit-identical top-k asserted against single-host")
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args(argv)
 
-    if args.build_mesh > 1:
+    if args.build_mesh > 1 or args.route_shards > 1:
         # must win the race with the first jax backend init; harmless if the
         # backend is already up — the mesh is clamped to visible devices below
         flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in flags:
+            n_force = max(args.build_mesh, args.route_shards)
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count="
-                f"{args.build_mesh}"
+                f"{n_force}"
             ).strip()
 
     print(f"[mate] building corpus ({args.n_tables} tables) ...")
@@ -197,6 +213,42 @@ def main(argv=None):
             f"shed={session.stats.shed}, degraded={session.stats.degraded})"
         )
     print(f"[mate] session: {session}")
+
+    if args.route_shards > 1:
+        t0 = time.time()
+        routed = MateSession.build(
+            corpus, config, distributed=True, n_shards=args.route_shards
+        )
+        t_build = time.time() - t0
+        lanes = routed.index.cfg.lanes
+        identical = True
+        items = 0
+        t0 = time.time()
+        for qi, (q, q_cols) in enumerate(queries):
+            topk_ref, _ = session.discover(q, q_cols)
+            topk_rt, st_rt = routed.discover(q, q_cols)
+            items += st_rt.pl_items_checked
+            identical &= [(e.table_id, e.joinability) for e in topk_ref] == [
+                (e.table_id, e.joinability) for e in topk_rt
+            ]
+        t_routed = time.time() - t0
+        host_gather_bytes = items * lanes * 4  # superkeys a host-gather ships
+        rs = routed.stats
+        print(
+            f"[mate] routed lake ({routed.index.n_shards} shards, built in "
+            f"{t_build:.2f}s): {len(queries)} queries in {t_routed:.2f}s, "
+            f"bit_identical={identical}, shard_launches={rs.shard_launches}, "
+            f"gather_demotions={rs.shard_gather_demotions}"
+        )
+        print(
+            f"[mate] routed traffic: route_bytes_merged="
+            f"{rs.route_bytes_merged}B crossed shard boundaries vs "
+            f"{host_gather_bytes}B of superkeys a host-gather path ships "
+            f"({rs.route_bytes_merged / max(host_gather_bytes, 1):.1%}); "
+            f"superkey rows crossing shards: 0 (by construction)"
+        )
+        if not identical:
+            raise SystemExit("[mate] routed top-k diverged from single-host")
 
     if not queries:
         return

@@ -83,7 +83,9 @@ def test_shard_impl_mapping(monkeypatch):
     assert distributed.shard_impl_for("fused") == "fused"
     assert distributed.shard_impl_for(Backend("fused")) == "fused"
     # gather-fused is a fused-family backend: the sharded filter runs its
-    # fused (host-gather) shard impl — per-shard device stores are item 1
+    # fused (host-gather) shard impl — and the demotion is VISIBLE now
+    # (debug log + stats counter; routed ShardedMateIndex keeps the
+    # gather-fused launch shard-local instead)
     assert distributed.shard_impl_for(Backend("fused-gather")) == "fused"
     assert distributed.shard_impl_for(Backend("xla")) == "broadcast"
     monkeypatch.setenv(ENV, "fused")
@@ -92,6 +94,23 @@ def test_shard_impl_mapping(monkeypatch):
     assert distributed.shard_impl_for(None) == (
         "fused" if registry.platform_default() == "fused" else "broadcast"
     )
+
+
+def test_shard_impl_gather_demotion_is_visible(caplog):
+    """shard_impl_for silently demoted fused-gather to the fused shard impl;
+    now it debug-logs the demotion and bumps the passed stats counter."""
+    from repro.core.discovery import DiscoveryStats
+
+    stats = DiscoveryStats()
+    with caplog.at_level("DEBUG", logger="repro.core.distributed"):
+        impl = distributed.shard_impl_for(Backend("fused-gather"), stats=stats)
+    assert impl == "fused"
+    assert stats.shard_gather_demotions == 1
+    assert any("demoting" in r.message for r in caplog.records)
+    # non-gather backends: no demotion, counter untouched
+    with caplog.at_level("DEBUG", logger="repro.core.distributed"):
+        assert distributed.shard_impl_for(Backend("fused"), stats=stats) == "fused"
+    assert stats.shard_gather_demotions == 1
 
 
 def test_env_var_read_only_by_registry():
