@@ -210,8 +210,15 @@ def serving():
     def key(entries):
         return [(e.table_id, e.joinability, e.mapping) for e in entries]
 
+    # the session serves at its default rank='quality' + profile gate, so
+    # the cold reference must run the raw engine with the same knobs
     cold = {
-        qi: key(discover_batched(idx, *distinct[qi], k=common.K)[0])
+        qi: key(
+            discover_batched(
+                idx, *distinct[qi], k=common.K,
+                rank="quality", profile_gate=True,
+            )[0]
+        )
         for qi in sorted(set(traffic.tolist()))
     }
 
@@ -252,7 +259,9 @@ def serving():
         req = eng.discover(q, q_cols, k=5)
         lat2.append(time.perf_counter() - t0)
         identical2 &= key(req.results) == key(
-            discover_batched(idx, q, q_cols, k=5)[0]
+            discover_batched(
+                idx, q, q_cols, k=5, rank="quality", profile_gate=True
+            )[0]
         )
     lat2_us = np.asarray(lat2) * 1e6
     common.emit(

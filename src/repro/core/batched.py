@@ -76,6 +76,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro.core import discovery as seq
+from repro.core import ranking
 from repro.core.corpus import Table
 from repro.core.discovery import DiscoveryStats, TopKEntry
 from repro.core.index import CandidateBlock, MateIndex
@@ -98,12 +99,41 @@ class QueryPlan:
     stats: DiscoveryStats
 
 
+def _gate_block(block: CandidateBlock, keep: np.ndarray) -> CandidateBlock:
+    """Drop gated tables (and their items) from a CSR candidate block.
+
+    ``keep`` is the profile gate's per-table mask; the surviving tables
+    stay in PL-descending order (a subsequence of a sorted sequence), so
+    the rule-1 prefix-cutoff argument downstream is unchanged."""
+    lengths = np.diff(block.table_ptr)
+    item_keep = np.repeat(keep, lengths)
+    kept_lengths = lengths[keep]
+    ptr = np.zeros(kept_lengths.shape[0] + 1, dtype=np.int64)
+    np.cumsum(kept_lengths, out=ptr[1:])
+    return CandidateBlock(
+        rows=block.rows[item_keep],
+        value_idx=block.value_idx[item_keep],
+        table_ids=block.table_ids[keep],
+        table_ptr=ptr,
+    )
+
+
 def plan_query(
     index: MateIndex, query: Table, q_cols: list[int],
     init_mode: str = "cardinality",
+    *,
+    profile_gate: bool = False,
 ) -> QueryPlan:
     """Initialization phase (§6.1) in columnar form: one hash launch, one
-    posting-list gather, one eligibility matrix."""
+    posting-list gather, one eligibility matrix.
+
+    ``profile_gate=True`` drops candidate tables whose column profiles
+    PROVE joinability 0 (``MateIndex.gate_candidates`` — presence-mask /
+    length-bucket / char-class / column-count necessary conditions) before
+    any superkey is gathered or filtered: pure pruning, the verified top-k
+    set is unchanged; ``stats.tables_gated`` / ``gate_bytes_saved`` count
+    the work the filter launches never saw.  ``tables_fetched`` /
+    ``pl_items_total`` stay PRE-gate (what the posting lists produced)."""
     stats = DiscoveryStats()
     init_col = seq.init_column_selection(query, q_cols, init_mode, index)
     init_idx = q_cols.index(init_col)
@@ -122,6 +152,16 @@ def plan_query(
     block = index.gather_candidates(values)
     stats.pl_items_total = block.n_items
     stats.tables_fetched = block.n_tables
+    if profile_gate and block.n_tables and distinct_keys:
+        keep = index.gate_candidates(distinct_keys, block.table_ids)
+        if not keep.all():
+            stats.tables_gated = int((~keep).sum())
+            n_before = block.n_items
+            block = _gate_block(block, keep)
+            # superkey lanes the filter launches now never gather/compare
+            stats.gate_bytes_saved = (
+                (n_before - block.n_items) * q_sk.shape[1] * 4
+            )
     elig = (
         elig_value[block.value_idx]
         if block.n_items
@@ -216,6 +256,26 @@ class _TopK:
         ]
         out.sort(key=lambda e: (-e.joinability, e.table_id))
         return out
+
+
+def _ranked_entries(
+    topk: _TopK, rank: str, scores: dict[int, float]
+) -> list[TopKEntry]:
+    """Order the heap's entries for the requested rank mode.
+
+    ``rank='count'`` is the historical (-joinability, table_id) order;
+    ``rank='quality'`` annotates each entry with its scoring-head value and
+    sorts (-quality, -joinability, table_id).  Either way the entries come
+    from the SAME heap — rank never changes set membership."""
+    entries = topk.entries()
+    if rank != "quality":
+        return entries
+    entries = [
+        dataclasses.replace(e, quality=float(scores.get(e.table_id, 0.0)))
+        for e in entries
+    ]
+    entries.sort(key=lambda e: (-e.quality, -e.joinability, e.table_id))
+    return entries
 
 
 # below this fraction of batch items surviving the entry bound, per-table
@@ -320,8 +380,19 @@ def discover_batched(
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
     filter_lanes: int | None = None,
+    rank: str = "count",
+    profile_gate: bool = False,
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Batched Algorithm 1: one filter launch per ``batch_tables`` tables.
+
+    ``profile_gate=True`` pre-filters the candidate block against the
+    column-profile store (see ``plan_query``) — pure pruning, set-identical.
+    ``rank='quality'`` runs the ``core.ranking`` scoring head over each
+    batch's counts vector (one extra launch per batch) and reorders the
+    returned entries by join quality; the heap — and therefore the verified
+    top-k SET — is untouched.  The raw engines default to the historical
+    ``rank='count'``/gate-off behaviour; ``DiscoveryConfig`` flips both
+    defaults at the session layer.
 
     Per batch, the device computes the subsumption matrix ∧ eligibility AND
     reduces it to per-table hit counts; only that counts vector (4 bytes per
@@ -350,8 +421,14 @@ def discover_batched(
     tightness) degrades.
     """
     bk = registry.resolve_backend(backend)
-    plan = plan_query(index, query, q_cols, init_mode)
+    plan = plan_query(index, query, q_cols, init_mode, profile_gate=profile_gate)
     stats, block = plan.stats, plan.block
+    q_sketch = (
+        ranking.query_sketch(index, plan.distinct_keys)
+        if rank == "quality"
+        else None
+    )
+    scores: dict[int, float] = {}
     full_lanes = plan.q_sk.shape[1]
     fl = full_lanes if filter_lanes is None else max(1, min(int(filter_lanes), full_lanes))
     stats.filter_lanes = fl
@@ -454,11 +531,18 @@ def discover_batched(
         else:
             stats.filter_readback_bytes += counts.nbytes
         stats.filter_passed += int(counts.sum())
+        if rank == "quality":
+            batch_ids = block.table_ids[start:stop]
+            sc = ranking.quality_scores(
+                index, batch_ids, np.asarray(counts),
+                len(plan.distinct_keys), q_sketch, stats=stats,
+            )
+            scores.update(zip(batch_ids.tolist(), sc.tolist()))
         _score_tables(
             index, plan, topk, hits, counts, rows, start, stop, lo,
             row_sk=row_sk, elig=elig, prefetch_frac=prefetch_frac,
         )
-    return topk.entries(), stats
+    return _ranked_entries(topk, rank, scores), stats
 
 
 @dataclasses.dataclass
@@ -514,9 +598,14 @@ def plan_and_count(
     init_mode: str = "cardinality",
     filter_lanes: int | None = None,
     fused_block_n: int | None = None,
+    profile_gate: bool = False,
 ) -> list[PlanCounts]:
     """Phase A of ``discover_many``: plan every request, then run the ONE
     shared filter launch and demux it into per-request ``PlanCounts``.
+
+    ``profile_gate=True`` applies the column-profile gate per plan (see
+    ``plan_query``) before the shared launch is assembled, so gated tables
+    never contribute rows to the group matrix at all.
 
     Everything up to (and including) ``gather_candidates`` + the §6.3
     filter lives here; ``score_from_counts`` is phase B (pruning, exact
@@ -530,7 +619,10 @@ def plan_and_count(
     yields bit-identical top-k.
     """
     bk = registry.resolve_backend(backend)
-    plans = [plan_query(index, q, q_cols, init_mode) for q, q_cols in queries]
+    plans = [
+        plan_query(index, q, q_cols, init_mode, profile_gate=profile_gate)
+        for q, q_cols in queries
+    ]
     if not plans:
         return []
     rows_all = np.concatenate([p.block.rows for p in plans])
@@ -656,9 +748,15 @@ def score_from_counts(
     *,
     prefetch_frac: float = _PREFETCH_FRAC,
     from_cache: bool = False,
+    rank: str = "count",
 ) -> tuple[list[TopKEntry], DiscoveryStats]:
     """Phase B of ``discover_many``: rule-1/2 pruning + exact verification
     + the top-k heap over one request's ``PlanCounts``.
+
+    ``rank='quality'`` runs ONE scoring launch over the plan's full counts
+    vector (phase A already produced it — no extra filter work) and orders
+    the returned entries by join quality; the heap itself is untouched, so
+    cached replays at either rank verify the same set.
 
     Re-runnable: stats land on a FRESH copy of the plan's, so the same
     PlanCounts (a bound-cache hit) can be scored any number of times — at
@@ -691,6 +789,14 @@ def score_from_counts(
         stats.filter_matrix_bytes += n_items * pc.group_keys
         if pc.hits_host:
             stats.filter_readback_bytes += n_items * pc.group_keys
+    scores: dict[int, float] = {}
+    if rank == "quality" and block.n_tables:
+        q_sketch = ranking.query_sketch(index, plan.distinct_keys)
+        sc = ranking.quality_scores(
+            index, block.table_ids, np.asarray(pc.counts),
+            len(plan.distinct_keys), q_sketch, stats=stats,
+        )
+        scores = dict(zip(block.table_ids.tolist(), sc.tolist()))
     topk = _TopK(k)
     # rule 1 (PL-desc suffix pruning) applies inside the range: the filter
     # already ran batched for every table, only verification work and
@@ -700,7 +806,7 @@ def score_from_counts(
         rule1=True, row_sk=pc.row_sk, elig=plan.elig,
         prefetch_frac=prefetch_frac,
     )
-    return topk.entries(), stats
+    return _ranked_entries(topk, rank, scores), stats
 
 
 def discover_many(
@@ -713,8 +819,15 @@ def discover_many(
     prefetch_frac: float = _PREFETCH_FRAC,
     fused_block_n: int | None = None,
     filter_lanes: int | None = None,
+    rank: str = "count",
+    profile_gate: bool = False,
 ) -> list[tuple[list[TopKEntry], DiscoveryStats]]:
     """Multi-query discovery sharing ONE filter launch.
+
+    ``rank``/``profile_gate`` thread through both phases (see
+    ``plan_and_count`` and ``score_from_counts``): the gate shrinks each
+    request's candidate block before the shared launch, quality ranking
+    adds one scoring launch per request — neither changes the verified set.
 
     All requests' candidate rows and query keys concatenate into a single
     subsumption launch; the match matrix is then demuxed per request and
@@ -746,10 +859,12 @@ def discover_many(
     pcs = plan_and_count(
         index, queries, backend,
         init_mode=init_mode, filter_lanes=filter_lanes,
-        fused_block_n=fused_block_n,
+        fused_block_n=fused_block_n, profile_gate=profile_gate,
     )
     return [
-        score_from_counts(index, pc, k_i, prefetch_frac=prefetch_frac)
+        score_from_counts(
+            index, pc, k_i, prefetch_frac=prefetch_frac, rank=rank
+        )
         for pc, k_i in zip(pcs, ks)
     ]
 

@@ -65,6 +65,27 @@ class DiscoveryStats:
     shard_gather_demotions: int = 0  # shard launches demoted off the
     # gather-fused path (store over budget / scatter-tile cap / no per-shard
     # store, e.g. the pre-routed mesh row filter) — each is also debug-logged
+    # ranking-subsystem accounting (``core.profiles`` / ``core.ranking``):
+    tables_gated: int = 0  # candidate tables the profile gate dropped before
+    # any filter launch (provably joinability 0 — pure pruning, so the
+    # verified top-k set is unchanged; see profiles.gate_tables)
+    gate_bytes_saved: int = 0  # superkey bytes the filter launches never
+    # touched because the gate dropped those tables' posting items first
+    # (items × lanes × 4, same units as gather_bytes_saved)
+    ranking_launches: int = 0  # quality-scoring launches (one per batch
+    # under rank='quality'; see core.ranking.quality_scores)
+
+    def merge(self, other: "DiscoveryStats") -> "DiscoveryStats":
+        """Accumulate ``other``'s counters into self, field by field.
+
+        Driven by ``dataclasses.fields`` so a newly added counter can never
+        be silently dropped — the shard/gather counters of PRs 7–8 each
+        hand-patched every aggregation site and this is the one replacement
+        for all of them (``SessionStats.absorb``, bench aggregation, ...).
+        """
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
 
     @property
     def readback_frac(self) -> float:
@@ -85,6 +106,8 @@ class TopKEntry:
     table_id: int
     joinability: int
     mapping: tuple[int, ...] | None  # candidate cols per query col
+    quality: float | None = None  # join-quality score (rank='quality' only;
+    # annotation — never part of heap selection, see core.ranking)
 
 
 def init_column_selection(

@@ -39,6 +39,7 @@ import time
 import numpy as np
 
 from repro.core import encoding, hashes, xash
+from repro.core import profiles as profiles_lib
 from repro.core.corpus import Corpus, Table
 
 _XASH_CHUNK = 1 << 15
@@ -228,6 +229,8 @@ class BuildStats:
     superkey_seconds: float = 0.0
     postings_seconds: float = 0.0
     merge_seconds: float = 0.0
+    profile_seconds: float = 0.0  # per-column ProfileStore pass (ranking)
+    profile_bytes: int = 0  # ProfileStore footprint (all arrays)
     total_seconds: float = 0.0
 
     @property
@@ -301,6 +304,7 @@ class MateIndex:
         self._device_store_epoch = -1
         self._deleted_mask: np.ndarray | None = None
         self._deleted_mask_epoch = -1
+        self._profiles: profiles_lib.ProfileStore | None = None
 
     @classmethod
     def _from_build(
@@ -328,6 +332,7 @@ class MateIndex:
         self._device_store_epoch = -1
         self._deleted_mask = None
         self._deleted_mask_epoch = -1
+        self._profiles = None
         return self
 
     @property
@@ -362,6 +367,47 @@ class MateIndex:
             self._device_store = jnp.asarray(self.superkeys)
             self._device_store_epoch = self._mutations
         return self._device_store
+
+    # -- column profiles (ranking subsystem) ----------------------------------
+
+    def profiles(self) -> profiles_lib.ProfileStore:
+        """Per-column ``ProfileStore`` for this index, epoch-pinned like the
+        device superkey store: ``build_index`` populates it at build time,
+        and any §5.4 mutation invalidates it — the next access rebuilds from
+        the mutated corpus arenas (lazily, exactly the ``device_store``
+        refresh discipline), so the profile gate can never prune against a
+        value set the lake no longer has."""
+        if self._profiles is None or self._profiles.epoch != self._mutations:
+            self._profiles = profiles_lib.build_profiles(
+                self.corpus, self.value_lanes, epoch=self._mutations
+            )
+        return self._profiles
+
+    def gate_candidates(
+        self, distinct_keys: list[tuple[str, ...]], table_ids: np.ndarray
+    ) -> np.ndarray:
+        """Profile gate: bool[n] keep-mask over candidate table ids.
+
+        False only for tables whose profiles PROVE joinability 0 against
+        every distinct query key (``profiles.gate_tables``) — pure pruning,
+        the verified top-k set is unchanged."""
+        kvi, probe, len_bucket, vclass = profiles_lib.query_gate_inputs(
+            distinct_keys, self.hash_values
+        )
+        return profiles_lib.gate_tables(
+            self.profiles(),
+            np.asarray(table_ids, dtype=np.int64),
+            kvi, probe, len_bucket, vclass, len(distinct_keys[0]),
+        )
+
+    def profile_features(
+        self, table_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Scoring-head feature gather: (card_max, n_rows, sketch) rows for
+        the given table ids (``core.ranking.quality_scores`` input)."""
+        store = self.profiles()
+        ids = np.asarray(table_ids, dtype=np.int64)
+        return store.card_max[ids], store.n_rows[ids], store.sketch[ids]
 
     # -- online-side hashing --------------------------------------------------
 
@@ -710,5 +756,24 @@ def build_index(
         corpus, cfg, hash_name, value_lanes, superkeys, payload, ptr
     )
     stats.merge_seconds = time.perf_counter() - t0
+
+    # -- per-column profiles (ranking subsystem) ----------------------------
+    # Sharded over contiguous TABLE ranges (profiles are per-table, so the
+    # row bounds above don't apply) and concatenated — byte-identical to the
+    # single-host pass at any shard count, like every artifact above.
+    t0 = time.perf_counter()
+    n_tables = len(corpus.row_base) - 1
+    tb = distributed.shard_bounds(n_tables, n_shards)
+    index._profiles = profiles_lib.merge_profiles(
+        [
+            profiles_lib.build_profiles(
+                corpus, value_lanes, int(tb[i]), int(tb[i + 1])
+            )
+            for i in range(n_shards)
+        ]
+    )
+    stats.profile_seconds = time.perf_counter() - t0
+    stats.profile_bytes = index._profiles.nbytes
+
     stats.total_seconds = time.perf_counter() - t_start
     return index, stats

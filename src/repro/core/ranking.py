@@ -1,0 +1,131 @@
+"""Join-quality scoring head for ranked discovery (ROADMAP item 3).
+
+MATE's engines return the verified top-k by exact joinability — how many
+distinct query keys a table matches.  That says nothing about how USEFUL
+the join is: a table matching every key once per key through a key-like
+column beats one matching the same keys through a low-cardinality column
+that would fan every query row out into dozens of join partners.  The
+scoring head turns signals the pipeline already owns into a per-table
+join-quality score:
+
+  * ``containment`` — the per-table eligible-hit count from the §6.3
+    filter launch (``filter_table_counts`` / the gather-fused variant),
+    clipped to the distinct-key count and normalised: the fraction of
+    query keys with a filter-surviving candidate row;
+  * ``uniqueness`` — max column cardinality over table rows from the
+    ``ProfileStore``: ~1.0 means the best candidate column is key-like
+    (low join multiplicity), the join-quality predictor of "Measuring
+    and Predicting the Quality of a Join for Data Discovery";
+  * ``similarity`` — matching min-hash sketch positions between the
+    query key values and the table's value set (profile distance).
+
+``score = containment · (W_BASE + W_UNIQ·uniqueness + W_SIM·similarity)``
+— monotone in containment, boosted by key-likeness and value overlap.
+All arithmetic is float32 elementwise; the device path is one jitted XLA
+launch per table batch (shape-bucketed like every ``kernels.ops`` entry
+point) with ``score_np`` as its numpy oracle.
+
+The score NEVER drives heap membership: selection stays exact-joinability
+(rule 1/2 + verification are untouched), so the verified top-k SET is
+bit-identical between ``rank='quality'`` and ``rank='count'`` — quality
+only reorders and annotates the returned entries.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import profiles
+
+W_BASE = np.float32(0.25)
+W_UNIQ = np.float32(0.55)
+W_SIM = np.float32(0.20)
+
+_jitted = None
+
+
+def _score_fn():
+    """The jitted scoring launch, built on first use (keeps jax out of the
+    import path, mirroring ``MateIndex.device_store``)."""
+    global _jitted
+    if _jitted is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def fn(counts, n_keys, card_max, n_rows, t_sketch, q_sketch):
+            c = jnp.minimum(counts, n_keys) / jnp.maximum(n_keys, 1.0)
+            u = card_max / jnp.maximum(n_rows, 1.0)
+            eq = (t_sketch == q_sketch[None, :]).astype(jnp.float32)
+            s = eq.sum(axis=1) / np.float32(profiles.SKETCH_K)
+            return c * (W_BASE + W_UNIQ * u + W_SIM * s)
+
+        _jitted = fn
+    return _jitted
+
+
+def score_np(
+    counts: np.ndarray,
+    n_keys: int,
+    card_max: np.ndarray,
+    n_rows: np.ndarray,
+    sketch_eq: np.ndarray,
+) -> np.ndarray:
+    """Numpy oracle for the scoring launch — same float32 op order."""
+    nk = np.float32(n_keys)
+    c = np.minimum(counts.astype(np.float32), nk) / np.maximum(
+        nk, np.float32(1.0)
+    )
+    u = card_max.astype(np.float32) / np.maximum(
+        n_rows.astype(np.float32), np.float32(1.0)
+    )
+    s = sketch_eq.astype(np.float32) / np.float32(profiles.SKETCH_K)
+    return (c * (W_BASE + W_UNIQ * u + W_SIM * s)).astype(np.float32)
+
+
+def query_sketch(index, distinct_keys: list[tuple]) -> np.ndarray:
+    """Min-hash sketch of the query's key-value set (one per plan)."""
+    uniq = list(dict.fromkeys(v for key in distinct_keys for v in key))
+    if not uniq:
+        return profiles.value_sketch(np.zeros(0, dtype=np.uint32))
+    lanes = index.hash_values(uniq)
+    return profiles.value_sketch(lanes[:, 0])
+
+
+def quality_scores(
+    index,
+    table_ids: np.ndarray,
+    counts: np.ndarray,
+    n_keys: int,
+    q_sketch: np.ndarray,
+    stats=None,
+) -> np.ndarray:
+    """float32[n] join-quality scores for one batch of candidate tables.
+
+    Gathers the tables' profile features (shard-local under a routed
+    index — ``profile_features`` reads each owning shard's store) and runs
+    ONE scoring launch over the batch.  Deterministic given the index.
+    """
+    n = int(np.asarray(table_ids).shape[0])
+    if n == 0:
+        return np.zeros(0, dtype=np.float32)
+    from repro.kernels import ops
+
+    card_max, n_rows, sketch = index.profile_features(table_ids)
+    nb = ops._bucket(n, 16)
+    counts_f = np.zeros(nb, dtype=np.float32)
+    counts_f[:n] = np.asarray(counts, dtype=np.float32)[:n]
+    card_f = np.zeros(nb, dtype=np.float32)
+    card_f[:n] = card_max.astype(np.float32)
+    rows_f = np.ones(nb, dtype=np.float32)
+    rows_f[:n] = n_rows.astype(np.float32)
+    sk = np.zeros((nb, profiles.SKETCH_K), dtype=np.uint32)
+    sk[:n] = sketch
+    out = np.asarray(
+        _score_fn()(
+            counts_f, np.float32(n_keys), card_f, rows_f, sk, q_sketch
+        )
+    )[:n]
+    if stats is not None:
+        stats.ranking_launches += 1
+    return out.astype(np.float32)

@@ -48,6 +48,7 @@ import time
 
 import numpy as np
 
+from repro.core import profiles as profiles_lib
 from repro.core import xash
 from repro.core.corpus import Corpus, Table
 from repro.core.index import (
@@ -113,6 +114,9 @@ class MateShard:
     _deleted_tables: set = dataclasses.field(default_factory=set)
     _deleted_mask: np.ndarray | None = None
     _deleted_mask_epoch: int = -1
+    # this shard's column-profile store (ranking subsystem), epoch-pinned to
+    # THIS shard's mutations exactly like the device store
+    _profiles: object = None
 
     @property
     def n_rows(self) -> int:
@@ -321,6 +325,78 @@ class ShardedMateIndex:
             m = sid == s
             out[m] = shard.superkeys[rows[m] - shard.row_lo]
         return out
+
+    # -- column profiles (ranking subsystem), shard-local -------------------
+
+    def _shard_ids_of_tables(self, table_ids: np.ndarray) -> np.ndarray:
+        """Owning shard id per table (whole-table ownership, vectorised)."""
+        his = np.asarray([s.table_hi for s in self.shards], dtype=np.int64)
+        sid = np.searchsorted(his, np.asarray(table_ids), side="right")
+        return np.clip(sid, 0, len(self.shards) - 1).astype(np.int64)
+
+    def _shard_profiles(self, shard: MateShard) -> profiles_lib.ProfileStore:
+        """The shard's own ``ProfileStore`` over its tables [table_lo,
+        table_hi), rebuilt lazily when THIS shard's §5.4 epoch moved — the
+        per-shard counterpart of ``MateIndex.profiles`` (and the same
+        refresh discipline as ``MateShard.device_store``)."""
+        if (
+            shard._profiles is None
+            or shard._profiles.epoch != shard._mutations
+        ):
+            shard._profiles = profiles_lib.build_profiles(
+                self.corpus, self.value_lanes,
+                shard.table_lo, shard.table_hi,
+                epoch=shard._mutations,
+            )
+        return shard._profiles
+
+    def gate_candidates(
+        self, distinct_keys: list[tuple[str, ...]], table_ids: np.ndarray
+    ) -> np.ndarray:
+        """Routed profile gate: the query's gate inputs are computed once,
+        each candidate table is gated against its OWNING shard's profile
+        store — no profile bytes cross shards, matching the filter-path
+        routing contract.  Same keep-mask as the single-host gate."""
+        ids = np.asarray(table_ids, dtype=np.int64)
+        keep = np.ones(ids.shape[0], dtype=bool)
+        if ids.shape[0] == 0 or not distinct_keys:
+            return keep
+        kvi, probe, len_bucket, vclass = profiles_lib.query_gate_inputs(
+            distinct_keys, self.hash_values
+        )
+        width = len(distinct_keys[0])
+        sid = self._shard_ids_of_tables(ids)
+        for s in np.unique(sid):
+            shard = self.shards[int(s)]
+            m = sid == s
+            keep[m] = profiles_lib.gate_tables(
+                self._shard_profiles(shard), ids[m] - shard.table_lo,
+                kvi, probe, len_bucket, vclass, width,
+            )
+        return keep
+
+    def profile_features(
+        self, table_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Scoring-head feature gather, each row from its owning shard's
+        store (``MateIndex.profile_features`` routed counterpart)."""
+        ids = np.asarray(table_ids, dtype=np.int64)
+        n = ids.shape[0]
+        card = np.zeros(n, dtype=np.int32)
+        rows = np.zeros(n, dtype=np.int32)
+        sketch = np.zeros((n, profiles_lib.SKETCH_K), dtype=np.uint32)
+        if n == 0:
+            return card, rows, sketch
+        sid = self._shard_ids_of_tables(ids)
+        for s in np.unique(sid):
+            shard = self.shards[int(s)]
+            m = sid == s
+            store = self._shard_profiles(shard)
+            local = ids[m] - shard.table_lo
+            card[m] = store.card_max[local]
+            rows[m] = store.n_rows[local]
+            sketch[m] = store.sketch[local]
+        return card, rows, sketch
 
     # -- the routed filter --------------------------------------------------
 
@@ -628,6 +704,16 @@ def build_routed_index(
     )
     stats.shard_rows = [s.n_rows for s in index.shards]
     stats.superkey_seconds = time.perf_counter() - t0  # superkeys + postings
+    # per-shard column profiles (ranking subsystem): built where the tables
+    # live and NEVER merged — the routed gate/score paths read each owning
+    # shard's store, mirroring the resident-postings design above.
+    t0 = time.perf_counter()
+    for s in index.shards:
+        s._profiles = profiles_lib.build_profiles(
+            corpus, value_lanes, s.table_lo, s.table_hi, epoch=0
+        )
+    stats.profile_seconds = time.perf_counter() - t0
+    stats.profile_bytes = sum(s._profiles.nbytes for s in index.shards)
     if use_mesh:
         index.attach_mesh(mesh, row_axes)
     stats.total_seconds = time.perf_counter() - t_start

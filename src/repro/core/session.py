@@ -65,6 +65,18 @@ class DiscoveryConfig:
       prefetch_frac — readback policy: below this fraction of batch items
                      surviving the entry bound, per-table hit-slice
                      readbacks beat one whole-batch transfer.
+      rank         — result ordering: 'quality' (default) runs the
+                     ``core.ranking`` scoring head over the filter counts
+                     and orders by join quality; 'count' is the historical
+                     exact-joinability order.  The verified top-k SET is
+                     identical either way — rank only reorders/annotates.
+      profile_gate — run the column-profile pre-filter (``core.profiles``)
+                     in front of candidate gathering: tables whose profiles
+                     PROVE joinability 0 are dropped before any filter
+                     launch.  Pure pruning — results are set-identical with
+                     the gate off.  (The raw ``core.batched`` functions
+                     default BOTH knobs off for bit-stable legacy callers;
+                     the session/serving surface defaults them on.)
 
     Serving (consumed by ``serve.engine.DiscoveryEngine``):
       window       — max requests per shared filter launch (group size).
@@ -102,6 +114,8 @@ class DiscoveryConfig:
     batch_tables: int = batched_lib.DEFAULT_BATCH_TABLES
     fused_block_n: int | None = None
     prefetch_frac: float = batched_lib._PREFETCH_FRAC
+    rank: str = "quality"
+    profile_gate: bool = True
     hash_name: str = "xash"
     use_corpus_char_freq: bool = True
     window: int = 8
@@ -124,6 +138,10 @@ class DiscoveryConfig:
         ):
             raise ValueError(
                 f"fused_block_n must be a power of two >= 128, got {self.fused_block_n}"
+            )
+        if self.rank not in ("quality", "count"):
+            raise ValueError(
+                f"rank must be 'quality' or 'count', got {self.rank!r}"
             )
         if not 0.0 <= self.prefetch_frac <= 1.0:
             raise ValueError(f"prefetch_frac must be in [0, 1], got {self.prefetch_frac}")
@@ -159,6 +177,29 @@ class DiscoveryConfig:
         return registry.resolve_backend(self.backend)
 
 
+# DiscoveryStats counters ``SessionStats.absorb`` does NOT aggregate:
+# per-request plan shape (meaningless summed across requests) and the
+# per-launch lane width.  Every OTHER DiscoveryStats field is absorbed by
+# name — so adding a counter to DiscoveryStats without either mirroring it
+# on SessionStats or listing it here raises AttributeError on the first
+# absorb, instead of silently dropping it from session accounting (the
+# hand-patched-aggregation failure mode of PRs 7–8).
+_NOT_AGGREGATED = frozenset({
+    "tables_fetched",
+    "tables_evaluated",
+    "tables_pruned_rule1",
+    "tables_pruned_rule2",
+    "pl_items_total",
+    "pl_items_checked",
+    "filter_lanes",
+})
+_ABSORBED = tuple(
+    f.name
+    for f in dataclasses.fields(DiscoveryStats)
+    if f.name not in _NOT_AGGREGATED
+)
+
+
 @dataclasses.dataclass
 class SessionStats:
     """Aggregate accounting across every request a session served."""
@@ -177,6 +218,10 @@ class SessionStats:
     route_bytes_merged: int = 0  # cross-shard count-merge bytes (the ONLY
     # bytes that cross a shard boundary on the routed filter path)
     shard_gather_demotions: int = 0  # shard launches demoted off gather-fused
+    # ranking-subsystem counters (``core.profiles`` / ``core.ranking``):
+    tables_gated: int = 0  # candidate tables the profile gate dropped
+    gate_bytes_saved: int = 0  # superkey bytes the gate kept out of filters
+    ranking_launches: int = 0  # quality-scoring launches
     # serving-tier counters (bumped by ``serve.engine.DiscoveryEngine``):
     cache_hits: int = 0  # requests answered from the query-result cache
     bound_hits: int = 0  # requests scored from cached PlanCounts (skipped
@@ -186,17 +231,8 @@ class SessionStats:
 
     def absorb(self, stats: DiscoveryStats) -> None:
         self.requests += 1
-        self.filter_checks += stats.filter_checks
-        self.filter_passed += stats.filter_passed
-        self.verified_tp += stats.verified_tp
-        self.verified_fp += stats.verified_fp
-        self.filter_matrix_bytes += stats.filter_matrix_bytes
-        self.filter_readback_bytes += stats.filter_readback_bytes
-        self.filter_fused_launches += stats.filter_fused_launches
-        self.gather_bytes_saved += stats.gather_bytes_saved
-        self.shard_launches += stats.shard_launches
-        self.route_bytes_merged += stats.route_bytes_merged
-        self.shard_gather_demotions += stats.shard_gather_demotions
+        for name in _ABSORBED:
+            setattr(self, name, getattr(self, name) + getattr(stats, name))
 
     @property
     def precision(self) -> float:
@@ -305,6 +341,8 @@ class MateSession:
             backend=self.backend,
             prefetch_frac=self.config.prefetch_frac,
             fused_block_n=self.config.fused_block_n,
+            rank=self.config.rank,
+            profile_gate=self.config.profile_gate,
         )
         self.stats.absorb(stats)
         return entries, stats
@@ -323,6 +361,8 @@ class MateSession:
             backend=self.backend,
             prefetch_frac=self.config.prefetch_frac,
             fused_block_n=self.config.fused_block_n,
+            rank=self.config.rank,
+            profile_gate=self.config.profile_gate,
         )
         for _, stats in out:
             self.stats.absorb(stats)
@@ -346,6 +386,7 @@ class MateSession:
             init_mode=self.config.init_mode,
             filter_lanes=filter_lanes,
             fused_block_n=self.config.fused_block_n,
+            profile_gate=self.config.profile_gate,
         )
 
     def score_from_counts(
@@ -366,6 +407,7 @@ class MateSession:
             self.config.k if k is None else k,
             prefetch_frac=self.config.prefetch_frac,
             from_cache=from_cache,
+            rank=self.config.rank,
         )
         self.stats.absorb(stats)
         return entries, stats

@@ -42,7 +42,11 @@ from repro.core.discovery import DiscoveryStats, TopKEntry
 
 
 def query_fingerprint(
-    query: Table, q_cols: list[int], init_mode: str = "cardinality"
+    query: Table,
+    q_cols: list[int],
+    init_mode: str = "cardinality",
+    rank: str = "count",
+    profile_gate: bool = False,
 ) -> bytes:
     """Digest of everything about a QUERY that determines its discovery
     result for a fixed index: the init-column heuristic, the key width, and
@@ -52,9 +56,18 @@ def query_fingerprint(
     Two query tables with the same key-column content — regardless of
     table name, id, or non-key columns — share a fingerprint, which is the
     whole point: the cache recognises repeated traffic by content.
+
+    ``rank``/``profile_gate`` join the digest because they shape the CACHED
+    ARTIFACTS: rank changes entry order/annotation, the gate changes the
+    candidate block a cached ``PlanCounts`` holds — a count-mode fill must
+    never answer a quality-mode request (the sets match, the payloads
+    don't).  Both default to the raw-engine defaults so pre-existing
+    fingerprints are unchanged.
     """
     h = hashlib.blake2b(digest_size=16)
-    h.update(f"{init_mode}|{len(q_cols)}".encode())
+    h.update(
+        f"{init_mode}|{len(q_cols)}|{rank}|{int(profile_gate)}".encode()
+    )
     for row in query.cells:
         for c in q_cols:
             v = row[c].encode()

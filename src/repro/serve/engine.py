@@ -213,7 +213,9 @@ class DiscoveryEngine:
         st = self.session.stats
         if self.result_cache is not None or self.bound_cache is not None:
             req.fingerprint = cache_lib.query_fingerprint(
-                query, q_cols, self.session.config.init_mode
+                query, q_cols, self.session.config.init_mode,
+                rank=self.session.config.rank,
+                profile_gate=self.session.config.profile_gate,
             )
             epoch = self.index.mutation_epoch
             if self.result_cache is not None:

@@ -106,16 +106,15 @@ def test_discovery_engine_slot_batching(lake):
     assert not any(r.done for r in reqs)
     served = engine.flush()
     assert served == reqs and not engine.queue
+    # the engine serves at the session default (quality rank), which only
+    # reorders the scalar engine's verified set
     seq, _ = discovery.discover(index, query, q_cols, k=5)
+    want = sorted((e.table_id, e.joinability) for e in seq)
     for r in served:
         assert r.done and r.stats is not None
-        assert [(e.table_id, e.joinability) for e in r.results] == [
-            (e.table_id, e.joinability) for e in seq
-        ]
+        assert sorted((e.table_id, e.joinability) for e in r.results) == want
     one = engine.discover(query, q_cols, k=5)
-    assert [(e.table_id, e.joinability) for e in one.results] == [
-        (e.table_id, e.joinability) for e in seq
-    ]
+    assert sorted((e.table_id, e.joinability) for e in one.results) == want
 
 
 def test_512bit_engines_bit_identical(lake512):
@@ -137,10 +136,20 @@ def test_512bit_engines_bit_identical(lake512):
         assert [(e.table_id, e.joinability, e.mapping) for e in entries] == want
     engine = DiscoveryEngine(index, batch=2)
     assert engine.bits == 512
+    # the engine defaults to rank='quality' + the profile gate: exact match
+    # against the raw engine run at the SAME flags (and set-identical to the
+    # count-ranked references above by the pure-pruning/reorder contract)
+    want_q = [
+        (e.table_id, e.joinability, e.mapping)
+        for e in discover_batched(
+            index, query, q_cols, k=10, rank="quality", profile_gate=True
+        )[0]
+    ]
+    assert sorted(want_q) == sorted(want)
     reqs = [engine.submit(query, q_cols, k=10) for _ in range(3)]
     engine.flush()
     for r in reqs:
-        assert [(e.table_id, e.joinability, e.mapping) for e in r.results] == want
+        assert [(e.table_id, e.joinability, e.mapping) for e in r.results] == want_q
 
 
 def test_512bit_topk_matches_bruteforce(lake512):

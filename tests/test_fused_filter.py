@@ -267,9 +267,12 @@ def test_fused_discover_many_and_engine(lake):
     engine.flush()
     for (q, qc), r in zip(queries, reqs):
         seq, _ = discovery.discover(index, q, qc, k=5)
-        assert [(e.table_id, e.joinability) for e in r.results] == [
+        # the session defaults to rank='quality' (ISSUE 9) which reorders
+        # the heap without changing membership — compare the SET here; the
+        # exact-order fused contract is pinned above at rank='count'
+        assert sorted((e.table_id, e.joinability) for e in r.results) == sorted(
             (e.table_id, e.joinability) for e in seq
-        ]
+        )
         assert r.stats.filter_matrix_bytes == 0
 
 

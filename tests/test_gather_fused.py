@@ -363,18 +363,20 @@ def test_gather_session_and_serving_inherit(lake):
     )
     ref, _ = discovery.discover(session.index, query, q_cols, k=10)
     got, stats = session.discover(query, q_cols)
-    assert [(e.table_id, e.joinability) for e in got] == [
+    # session default rank='quality' (ISSUE 9) reorders without changing
+    # membership — the gather contract here is the SET + the byte counters
+    assert sorted((e.table_id, e.joinability) for e in got) == sorted(
         (e.table_id, e.joinability) for e in ref
-    ]
+    )
     assert stats.gather_bytes_saved > 0
     assert session.stats.gather_bytes_saved == stats.gather_bytes_saved
     pcs = session.plan_and_count([(query, q_cols)], filter_lanes=4)
     assert pcs[0].row_sk is None
     entries, st = session.score_from_counts(pcs[0], k=10)
-    assert [(e.table_id, e.joinability) for e in entries] == [
+    assert sorted((e.table_id, e.joinability) for e in entries) == sorted(
         (e.table_id, e.joinability) for e in ref
-    ]
-    assert st.filter_lanes == 4  # degraded launch, bit-identical results
+    )
+    assert st.filter_lanes == 4  # degraded launch, set-identical results
 
 
 # ---------------------------------------------------------------------------

@@ -86,7 +86,13 @@ def _key(entries):
 
 
 def _cold(index, query, q_cols, k=5):
-    return _key(discover_batched(index, query, q_cols, k=k)[0])
+    # raw-engine reference at the SESSION's default flags (rank='quality' +
+    # profile gate), so cache-hit comparisons stay exact including order
+    return _key(
+        discover_batched(
+            index, query, q_cols, k=k, rank="quality", profile_gate=True
+        )[0]
+    )
 
 
 async def _spin(n=12):
@@ -131,9 +137,11 @@ def test_degrade_admits_at_narrow_width_bit_identical(built, lake):
     assert session.stats.degraded == 1 and session.stats.shed == 0
     eng.flush()
     # the degraded request's group ran at 4 lanes (128 bits) of the 16-lane
-    # index — and the result is still exactly the cold 512-bit answer.
+    # index — the verified SET is still exactly the cold 512-bit answer.
+    # (Quality ORDER may differ: the scoring head's containment term reads
+    # the filter counts, and lane-prefix counts are looser by design.)
     assert degraded.stats.filter_lanes == 4
-    assert _key(degraded.results) == _cold(built[512], *queries[1])
+    assert sorted(_key(degraded.results)) == sorted(_cold(built[512], *queries[1]))
     assert _key(normal.results) == _cold(built[512], *queries[0])
     # degraded (prefix) filtering can only pass MORE pairs, never fewer
     cold_passed = discover_batched(built[512], *queries[1], k=5)[1].filter_passed

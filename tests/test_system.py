@@ -73,7 +73,41 @@ def test_discovery_driver_sharded_build_subprocess():
     )
     assert res.returncode == 0, res.stderr[-2000:]
     assert "build stats: shards=4 mesh={'data': 4}" in res.stdout, res.stdout
-    assert "engines_bit_identical=True" in res.stdout
+    # default rank is 'quality' (ISSUE 9): the driver compares engine SETS
+    assert "engines_set_identical=True" in res.stdout
+
+
+def test_discovery_driver_rank_flags_subprocess():
+    """--rank/--no-profile-gate: quality rank reports the gate counters and
+    count rank restores the exact engines_bit_identical comparison."""
+    import os
+
+    env = {**os.environ, "PYTHONPATH": "src"}
+    cwd = __file__.rsplit("/", 2)[0]
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.discovery",
+            "--n-tables", "80", "--queries", "2", "--rows", "8",
+            "--rank", "quality",
+        ],
+        capture_output=True, text=True, timeout=600, cwd=cwd, env=env,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "engines_set_identical=True" in res.stdout, res.stdout
+    assert "profile gate (on, rank=quality)" in res.stdout, res.stdout
+    assert "ranking_launches=" in res.stdout
+
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.discovery",
+            "--n-tables", "80", "--queries", "2", "--rows", "8",
+            "--rank", "count", "--no-profile-gate",
+        ],
+        capture_output=True, text=True, timeout=600, cwd=cwd, env=env,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "engines_bit_identical=True" in res.stdout, res.stdout
+    assert "profile gate (off, rank=count)" in res.stdout, res.stdout
 
 
 def test_enrichment_operator():
