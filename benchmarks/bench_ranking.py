@@ -27,9 +27,7 @@ import time
 from benchmarks import common
 from repro.core import xash
 from repro.core.batched import discover_batched
-from repro.core.corpus import Corpus, Table
 from repro.core.index import MateIndex
-from repro.data import synthetic
 
 N_KEYS = 20
 N_GOOD = 10
@@ -41,31 +39,12 @@ BITS = 128
 
 
 def planted_lake():
-    """Returns (corpus, query, q_cols, good_ids)."""
-    keys = [(f"pkA{r:02d}", f"pkB{r:02d}") for r in range(N_KEYS)]
-    query = Table(
-        -1, [[a, b, f"qx{r:02d}"] for r, (a, b) in enumerate(keys)]
+    """Returns (corpus, query, q_cols, good_ids) — the shared factory at
+    this module's historical parameters (byte-identical lake)."""
+    return common.planted_quality_lake(
+        n_keys=N_KEYS, n_good=N_GOOD, n_bad=N_BAD,
+        n_narrow=N_NARROW, n_noise=N_NOISE, noise_seed=11,
     )
-    tables: list[Table] = []
-    good_ids: set[int] = set()
-    # good/bad interleaved: even ids good, odd ids bad
-    for i in range(N_GOOD + N_BAD):
-        tid = len(tables)
-        cells = [[a, b, f"t{tid}v{r}"] for r, (a, b) in enumerate(keys)]
-        if i % 2:  # bad: dilute every column with repeated filler rows
-            cells += [[f"pad{tid}", f"pad{tid}", f"pad{tid}"]] * (4 * N_KEYS)
-        else:
-            good_ids.add(tid)
-        tables.append(Table(tid, cells))
-    for _ in range(N_NARROW):  # candidates the gate must prune
-        tid = len(tables)
-        tables.append(Table(tid, [[a] for a, _b in keys]))
-    noise = synthetic.make_corpus(
-        synthetic.SyntheticSpec(n_tables=N_NOISE, seed=11)
-    )
-    for t in noise.tables:
-        tables.append(Table(len(tables), t.cells))
-    return Corpus(tables), query, [0, 1], good_ids
 
 
 def _precision_at(entries, good_ids, n=PREC_AT):

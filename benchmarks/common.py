@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import discovery, xash
 from repro.core.batched import discover_batched, discover_many, filter_outcomes
+from repro.core.corpus import Corpus, Table
 from repro.core.index import MateIndex
 from repro.data import synthetic
 from repro.kernels import registry
@@ -77,6 +78,53 @@ def query_group(n_rows: int, key_width: int = 2):
             corpus(), N_QUERIES, n_rows, key_width, seed=SEED + 2
         )
     )
+
+
+def planted_quality_lake(
+    n_keys: int = 20,
+    n_good: int = 10,
+    n_bad: int = 10,
+    n_narrow: int = 10,
+    n_noise: int = 30,
+    noise_seed: int = 11,
+):
+    """Deterministic lake separating count rank from quality rank
+    (``bench_ranking``'s planted lake, shared so other sections can reuse
+    the shape).  Returns (corpus, query, q_cols, good_ids):
+
+      * ``good`` tables hold each composite key exactly once — joinability
+        ``n_keys``, uniqueness ~1.0;
+      * ``bad`` tables hold the same keys plus repeated filler rows — the
+        SAME joinability, uniqueness ~0.2; good/bad ids interleave so count
+        rank alternates the classes;
+      * ``narrow`` 1-column tables hold the init-column values — posting
+        candidates that can never host a width-2 key (profile-gate fodder);
+      * ``noise`` tables come from the seeded synthetic generator.
+    """
+    keys = [(f"pkA{r:02d}", f"pkB{r:02d}") for r in range(n_keys)]
+    query = Table(
+        -1, [[a, b, f"qx{r:02d}"] for r, (a, b) in enumerate(keys)]
+    )
+    tables: list[Table] = []
+    good_ids: set[int] = set()
+    # good/bad interleaved: even ids good, odd ids bad
+    for i in range(n_good + n_bad):
+        tid = len(tables)
+        cells = [[a, b, f"t{tid}v{r}"] for r, (a, b) in enumerate(keys)]
+        if i % 2:  # bad: dilute every column with repeated filler rows
+            cells += [[f"pad{tid}", f"pad{tid}", f"pad{tid}"]] * (4 * n_keys)
+        else:
+            good_ids.add(tid)
+        tables.append(Table(tid, cells))
+    for _ in range(n_narrow):  # candidates the gate must prune
+        tid = len(tables)
+        tables.append(Table(tid, [[a] for a, _b in keys]))
+    noise = synthetic.make_corpus(
+        synthetic.SyntheticSpec(n_tables=n_noise, seed=noise_seed)
+    )
+    for t in noise.tables:
+        tables.append(Table(len(tables), t.cells))
+    return Corpus(tables), query, [0, 1], good_ids
 
 
 def fp_outcomes(idx, queries, check_false_negatives: bool = False) -> dict:

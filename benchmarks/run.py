@@ -25,8 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        bench_figures, bench_fp_rate, bench_kernels, bench_ranking,
-        bench_tables, common,
+        bench_fd, bench_figures, bench_fp_rate, bench_kernels,
+        bench_ranking, bench_tables, common,
     )
 
     if args.quick:
@@ -55,6 +55,7 @@ def main() -> None:
     section("figures", bench_figures.main)
     section("kernels", bench_kernels.main)
     section("ranking", lambda: bench_ranking.main([]))
+    section("fd", lambda: bench_fd.main([]))
     # the width sweep exists to build 512-bit indexes — skipped entirely in
     # quick mode (run `benchmarks.bench_fp_rate --quick` directly for a
     # small-group 128/512 trend, as CI's bench job does)

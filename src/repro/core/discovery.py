@@ -74,6 +74,18 @@ class DiscoveryStats:
     # (items × lanes × 4, same units as gather_bytes_saved)
     ranking_launches: int = 0  # quality-scoring launches (one per batch
     # under rank='quality'; see core.ranking.quality_scores)
+    # FD-workload accounting (``core.fd.discover_fds``): counts-as-refutation
+    # prunes candidate tables whose filter count upper bound is below
+    # min_support (exact on the negative side — the §6.3 filter has no false
+    # negatives, so a count below the bar PROVES true support is too), and
+    # only survivors pay the validation re-gather.
+    fd_candidates: int = 0  # candidate tables entering the FD workload (every
+    # table with a posting item for the determinant init column)
+    fd_validated: int = 0  # tables surviving the count prune — these re-gather
+    # rows for the exact determinant-group → dependent-value check
+    fd_bytes_verified: int = 0  # superkey bytes the validation pass re-gathered
+    # (n_items × lanes × 4 per surviving table; the prune's whole point is
+    # keeping this a small fraction of what validating every candidate costs)
 
     def merge(self, other: "DiscoveryStats") -> "DiscoveryStats":
         """Accumulate ``other``'s counters into self, field by field.

@@ -77,6 +77,14 @@ class DiscoveryConfig:
                      the gate off.  (The raw ``core.batched`` functions
                      default BOTH knobs off for bit-stable legacy callers;
                      the session/serving surface defaults them on.)
+      signals      — multi-signal ensemble for the FD workload
+                     (``MateSession.discover_fds``): a tuple of
+                     (name, weight) pairs over ``core.fd.SIGNAL_NAMES``
+                     ('joinability' | 'uniqueness' | 'sketch' | 'name'),
+                     kept as a tuple-of-tuples so the frozen config stays
+                     hashable.  None (default) orders FD candidates by raw
+                     support; the reported support/holds/violations facts
+                     are identical either way — signals only score/reorder.
 
     Serving (consumed by ``serve.engine.DiscoveryEngine``):
       window       — max requests per shared filter launch (group size).
@@ -116,6 +124,7 @@ class DiscoveryConfig:
     prefetch_frac: float = batched_lib._PREFETCH_FRAC
     rank: str = "quality"
     profile_gate: bool = True
+    signals: tuple[tuple[str, float], ...] | None = None
     hash_name: str = "xash"
     use_corpus_char_freq: bool = True
     window: int = 8
@@ -143,6 +152,29 @@ class DiscoveryConfig:
             raise ValueError(
                 f"rank must be 'quality' or 'count', got {self.rank!r}"
             )
+        if self.signals is not None:
+            from repro.core import fd as fd_lib
+
+            if not isinstance(self.signals, tuple):
+                raise ValueError(
+                    "signals must be a tuple of (name, weight) pairs or None "
+                    f"(got {type(self.signals).__name__} — dicts/lists are "
+                    "unhashable, which would break the frozen config)"
+                )
+            for pair in self.signals:
+                if not (isinstance(pair, tuple) and len(pair) == 2):
+                    raise ValueError(
+                        f"each signal must be a (name, weight) pair, got {pair!r}"
+                    )
+                name, weight = pair
+                if name not in fd_lib.SIGNAL_NAMES:
+                    raise ValueError(
+                        f"unknown signal {name!r}; valid: {fd_lib.SIGNAL_NAMES}"
+                    )
+                if not weight > 0:
+                    raise ValueError(
+                        f"signal weight must be > 0, got {name}={weight!r}"
+                    )
         if not 0.0 <= self.prefetch_frac <= 1.0:
             raise ValueError(f"prefetch_frac must be in [0, 1], got {self.prefetch_frac}")
         if self.batch_tables < 1:
@@ -222,6 +254,10 @@ class SessionStats:
     tables_gated: int = 0  # candidate tables the profile gate dropped
     gate_bytes_saved: int = 0  # superkey bytes the gate kept out of filters
     ranking_launches: int = 0  # quality-scoring launches
+    # FD-workload counters (``core.fd.discover_fds``):
+    fd_candidates: int = 0  # candidate tables entering FD workloads
+    fd_validated: int = 0  # tables surviving the count prune into validation
+    fd_bytes_verified: int = 0  # superkey bytes validation re-gathered
     # serving-tier counters (bumped by ``serve.engine.DiscoveryEngine``):
     cache_hits: int = 0  # requests answered from the query-result cache
     bound_hits: int = 0  # requests scored from cached PlanCounts (skipped
@@ -411,6 +447,36 @@ class MateSession:
         )
         self.stats.absorb(stats)
         return entries, stats
+
+    def discover_fds(
+        self,
+        query: Table,
+        determinant_cols: list[int],
+        dependent_col: int,
+        *,
+        min_support: int = 1,
+    ) -> tuple[list["fd_module.FDCandidate"], DiscoveryStats]:
+        """FD workload (``core.fd``): which lake tables preserve the candidate
+        FD ``determinant_cols → dependent_col`` on the (never materialized)
+        join with ``query``?  The session's backend/gate/init knobs apply
+        unchanged; ``config.signals`` switches on the multi-signal ensemble
+        ordering.  Stats are absorbed like any other request."""
+        from repro.core import fd as fd_module
+
+        fds, stats = fd_module.discover_fds(
+            self.index,
+            query,
+            determinant_cols,
+            dependent_col,
+            min_support=min_support,
+            backend=self.backend,
+            init_mode=self.config.init_mode,
+            profile_gate=self.config.profile_gate,
+            signals=self.config.signals,
+            fused_block_n=self.config.fused_block_n,
+        )
+        self.stats.absorb(stats)
+        return fds, stats
 
     # index mutation passes through (§5.4): the session stays valid because
     # MateIndex updates are in-place and the backend/config hold no arrays.

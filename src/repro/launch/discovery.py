@@ -43,6 +43,8 @@ import numpy as np
 import jax
 
 from repro.core import discovery
+from repro.core import fd as fd_lib
+from repro.core.corpus import Table
 from repro.core.session import DiscoveryConfig, MateSession
 from repro.core import distributed
 from repro.data import synthetic
@@ -82,6 +84,15 @@ def main(argv=None):
                     choices=["shed", "degrade"],
                     help="at max_queue: reject with AdmissionError, or admit "
                          "at degraded 128-bit filtering (still bit-identical)")
+    ap.add_argument("--fds", action="store_true",
+                    help="also run the FD workload (core.fd): test a "
+                         "candidate functional dependency det-cols -> "
+                         "dependent against every joining lake table, no "
+                         "join materialized")
+    ap.add_argument("--fd-signals", action="store_true",
+                    help="order FD candidates by the multi-signal ensemble "
+                         "(joinability + uniqueness + sketch + name) instead "
+                         "of raw support")
     ap.add_argument("--result-cache", type=int, default=0,
                     help="query-result cache capacity (0: off) — repeated "
                          "queries answer at submit, invalidated on mutations")
@@ -122,6 +133,7 @@ def main(argv=None):
         flush_after=args.flush_after, max_queue=args.max_queue,
         pressure_policy=args.pressure_policy, result_cache=args.result_cache,
         bound_cache=args.bound_cache,
+        signals=fd_lib.DEFAULT_SIGNALS if args.fd_signals else None,
     )
     build_mesh = None
     if args.build_mesh > 1:
@@ -207,6 +219,36 @@ def main(argv=None):
         f"gate_bytes_saved={session.stats.gate_bytes_saved}B "
         f"ranking_launches={session.stats.ranking_launches}"
     )
+
+    if args.fds and queries:
+        # FD workload demo: extend the first query with a synthetic dependent
+        # column (one value per determinant key, FD-clean), then duplicate
+        # one key with a CONFLICTING dependent value so a violating group
+        # exists — tables matching that key must come back holds=False.
+        q0, qc0 = queries[0]
+        dep_col = q0.n_cols
+        cells = [list(row) + [f"dep{i}"] for i, row in enumerate(q0.cells)]
+        cells.append(list(q0.cells[0]) + ["dep-conflict"])
+        fd_query = Table(-1, cells, name="fd probe")
+        t0 = time.time()
+        fds, fstats = session.discover_fds(
+            fd_query, list(qc0), dep_col, min_support=1
+        )
+        print(
+            f"[mate] FD workload (det={list(qc0)} -> dep={dep_col}, "
+            f"signals={'on' if config.signals else 'off'}): "
+            f"candidates={fstats.fd_candidates} "
+            f"validated={fstats.fd_validated} "
+            f"pruned={fstats.fd_candidates - fstats.fd_validated} "
+            f"bytes_verified={fstats.fd_bytes_verified}B "
+            f"in {time.time()-t0:.3f}s"
+        )
+        for c in fds[:5]:
+            score = "" if c.score is None else f" score={c.score:.3f}"
+            print(
+                f"[mate]   table {c.table_id}: support={c.support} "
+                f"holds={c.holds} violations={c.violations}{score}"
+            )
 
     # multi-query serving path: requests share filter launches in slot
     # groups (the shared launch costs O(rows x keys) of the whole group,

@@ -47,6 +47,7 @@ def query_fingerprint(
     init_mode: str = "cardinality",
     rank: str = "count",
     profile_gate: bool = False,
+    workload: str = "join",
 ) -> bytes:
     """Digest of everything about a QUERY that determines its discovery
     result for a fixed index: the init-column heuristic, the key width, and
@@ -63,10 +64,17 @@ def query_fingerprint(
     never answer a quality-mode request (the sets match, the payloads
     don't).  Both default to the raw-engine defaults so pre-existing
     fingerprints are unchanged.
+
+    ``workload`` discriminates WHAT is being asked of those key columns:
+    'join' (top-k joinability, the default) vs FD workloads
+    (``core.fd.discover_fds`` — callers encode the dependent column and
+    min_support, e.g. ``f"fd:{dependent_col}:{min_support}"``).  An FD
+    request over the same determinant columns must never hit a
+    joinability fill: the cached payloads are different types entirely.
     """
     h = hashlib.blake2b(digest_size=16)
     h.update(
-        f"{init_mode}|{len(q_cols)}|{rank}|{int(profile_gate)}".encode()
+        f"{init_mode}|{len(q_cols)}|{rank}|{int(profile_gate)}|{workload}".encode()
     )
     for row in query.cells:
         for c in q_cols:

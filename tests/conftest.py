@@ -5,3 +5,76 @@ import sys
 # device count in subprocesses; never set xla_force_host_platform_device_count
 # here — smoke tests and benches must see 1 device).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# Shared seeded lake factories.
+#
+# Three test modules (and bench_ranking, see benchmarks/common.py for the
+# planted-quality variant) used to copy-paste these builders; a factory call
+# with explicit parameters keeps each module's lake byte-identical to what
+# its fixture used to build inline while making "same lake, different module"
+# a visible fact instead of a coincidence of duplicated literals.
+# ---------------------------------------------------------------------------
+
+from repro.core import xash  # noqa: E402  (path bootstrap above)
+from repro.core.index import MateIndex, build_index  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+
+ALL_BITS = (128, 256, 512)
+
+
+def ground_truth_lake(
+    n_tables: int = 60,
+    corpus_seed: int = 5,
+    n_rows: int = 25,
+    key_width: int = 2,
+    query_seed: int = 7,
+):
+    """Seeded corpus + one query with injected ground-truth joinability.
+
+    Returns (corpus, query, q_cols, expected) — ``expected`` maps injected
+    table id → minimum joinability (``synthetic.make_query_with_ground_truth``
+    rebuilds the corpus arenas after cell surgery, hence the re-bind).
+    """
+    corpus = synthetic.make_corpus(
+        synthetic.SyntheticSpec(n_tables=n_tables, seed=corpus_seed)
+    )
+    query, q_cols, expected, corpus = synthetic.make_query_with_ground_truth(
+        corpus, n_rows=n_rows, key_width=key_width, seed=query_seed
+    )
+    return corpus, query, q_cols, expected
+
+
+def mixed_query_lake(
+    n_tables: int = 120,
+    corpus_seed: int = 7,
+    n_queries: int = 4,
+    n_rows: int = 20,
+    key_width: int = 2,
+    query_seed: int = 11,
+):
+    """Seeded corpus + FP-heavy mixed queries (the paper's sensor regime:
+    key columns drawn from different tables).  Returns (corpus, queries)."""
+    corpus = synthetic.make_corpus(
+        synthetic.SyntheticSpec(n_tables=n_tables, seed=corpus_seed)
+    )
+    queries = synthetic.make_mixed_queries(
+        corpus, n_queries, n_rows, key_width, seed=query_seed
+    )
+    return corpus, queries
+
+
+def indexes_at_widths(corpus, widths=ALL_BITS, built: bool = True):
+    """One index per superkey width.  ``built=True`` runs the full offline
+    phase (``build_index``: eager profiles + build stats); ``built=False``
+    wraps ``MateIndex`` directly (lazy profiles), preserving the historical
+    behaviour of modules that never touch the profile store."""
+    if built:
+        return {
+            bits: build_index(corpus, cfg=xash.XashConfig(bits=bits))[0]
+            for bits in widths
+        }
+    return {
+        bits: MateIndex(corpus, cfg=xash.XashConfig(bits=bits))
+        for bits in widths
+    }

@@ -1,0 +1,360 @@
+"""FD-workload acceptance (ISSUE 10): ``core.fd.discover_fds`` against a
+brute-force join + groupby oracle.
+
+Pinned contracts:
+  * ``discover_fds`` reports EXACTLY the oracle's per-table facts
+    (support, holds, violations) on planted lakes containing clean FD
+    tables, violators, near-miss tables (violating VALUES without the
+    composite key), duplicate rows, NULL-like empty strings, permuted key
+    columns, and zero-row tables — at 128/256/512 bits;
+  * zero false negatives at every width: the count prune is exact on the
+    negative side (§6.3 lemma), so no table the oracle reports can be
+    missing;
+  * global and routed ({1,2,4,8} shards) runs are bit-identical;
+  * the validation re-gather is epoch-pinned — a §5.4 mutation between the
+    filter launch and validation raises instead of silently validating
+    against rows the filter never probed;
+  * the multi-signal ensemble only SCORES and reorders — the reported facts
+    are identical with signals off — and ``DiscoveryConfig`` rejects
+    malformed signal specs;
+  * the pure-python oracle and the pandas join+groupby oracle agree
+    (pandas is optional: the python fallback keeps the harness running on
+    deps-minimal environments).
+
+The hypothesis property widens the seed net; without hypothesis the seeded
+parametrizations still pin the contract.
+"""
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # property tests skip; unit tests still run
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    given = settings = _skip_decorator
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+try:
+    import pandas as pd
+
+    HAVE_PANDAS = True
+except ModuleNotFoundError:
+    HAVE_PANDAS = False
+
+from repro.core import batched, fd, xash
+from repro.core.corpus import Corpus, Table
+from repro.core.index import build_index
+from repro.core.routing import build_routed_index
+from repro.core.session import DiscoveryConfig, MateSession
+
+from conftest import ALL_BITS
+
+SHARD_COUNTS = (1, 2, 4, 8)
+SEEDS = (0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Planted-FD lake: every edge the workload must survive, seeded.
+# ---------------------------------------------------------------------------
+
+def planted_fd_lake(seed: int):
+    """Returns (corpus, query, determinant_cols, dependent_col).
+
+    Query groups 0 and 1 VIOLATE the FD (two dependent values); group 2 has
+    a duplicate row (clean); one group uses an empty-string determinant
+    value and an empty-string dependent value.  The lake plants clean-FD
+    tables, violators (hold a violating composite key), near-misses (hold
+    the violating VALUES but never the composite key), a permuted-column
+    match, a zero-row table, and seeded single-value noise.
+    """
+    rng = np.random.default_rng(seed)
+    n_keys = 6
+    keys = [(f"a{seed}k{r}", f"b{seed}k{r}") for r in range(n_keys)]
+    q_cells = []
+    for r, (a, b) in enumerate(keys):
+        q_cells.append([a, b, f"d{r}"])
+        if r < 2:
+            q_cells.append([a, b, f"d{r}x"])  # violating group (2 dep values)
+        if r == 2:
+            q_cells.append([a, b, f"d{r}"])  # duplicate row — still clean
+    q_cells.append(["", f"b{seed}nul", ""])  # NULL-like empty strings
+    query = Table(-1, q_cells, name=f"fd query {seed}")
+    det_cols, dep_col = [0, 1], 2
+
+    tables: list[Table] = []
+    # clean FD tables: only clean composite keys
+    tables.append(Table(0, [[a, b, f"p{seed}"] for a, b in keys[2:]],
+                        name="clean wide"))
+    tables.append(Table(1, [[keys[3][0], keys[3][1], "q"],
+                            [keys[4][0], keys[4][1], "q"]], name="clean two"))
+    # violators: hold a violating composite key (+ clean ones for support)
+    tables.append(Table(2, [[keys[0][0], keys[0][1], "v"],
+                            [keys[2][0], keys[2][1], "v"]], name="violator a"))
+    tables.append(Table(3, [[keys[1][0], keys[1][1], "w"]], name="violator b"))
+    # near-miss: the violating VALUES appear, the composite key never does
+    tables.append(Table(4, [[keys[0][0], f"zz{seed}"],
+                            [f"yy{seed}", keys[0][1]],
+                            [keys[5][0], keys[5][1]]], name="near miss"))
+    # permuted columns: key values live in (2, 1) — the injective mapping
+    tables.append(Table(5, [["pad", keys[5][1], keys[5][0]]], name="permuted"))
+    # the empty-string determinant key, matchable
+    tables.append(Table(6, [["", f"b{seed}nul", "k"]], name="empty det"))
+    tables.append(Table(7, [], name="zero rows"))
+    # seeded noise: single determinant-column values (posting candidates
+    # whose composite keys never match)
+    for _ in range(8):
+        tid = len(tables)
+        r = int(rng.integers(n_keys))
+        cells = [[keys[r][0], f"n{tid}x{j}{seed}"]
+                 for j in range(int(rng.integers(1, 4)))]
+        tables.append(Table(tid, cells))
+    return Corpus(tables), query, det_cols, dep_col
+
+
+# ---------------------------------------------------------------------------
+# Oracles: brute-force join + groupby, pure python and pandas.
+# ---------------------------------------------------------------------------
+
+def _row_matches(key: tuple, row: list) -> bool:
+    """Injective column-mapping match (independent of the engine's
+    ``_verify_pair``): some assignment of DISTINCT row columns equals the
+    key tuple position-wise."""
+    if len(row) < len(key):
+        return False
+    per_col = [[c for c, v in enumerate(row) if v == qv] for qv in key]
+    if any(not cols for cols in per_col):
+        return False
+    for assign in itertools.product(*per_col):
+        if len(set(assign)) == len(assign):
+            return True
+    return False
+
+
+def fd_oracle_python(corpus, query, det_cols, dep_col, min_support):
+    """{table_id: (support, holds, violations)} by scanning every row."""
+    dep_of_key: dict[tuple, set] = {}
+    for row in query.cells:
+        k = tuple(row[c] for c in det_cols)
+        dep_of_key.setdefault(k, set()).add(row[dep_col])
+    out = {}
+    for t in corpus.tables:
+        matched = {
+            k for k in dep_of_key
+            if any(_row_matches(k, row) for row in t.cells)
+        }
+        if len(matched) < min_support:
+            continue
+        viol = sum(1 for k in matched if len(dep_of_key[k]) > 1)
+        out[t.table_id] = (len(matched), viol == 0, viol)
+    return out
+
+
+def fd_oracle_pandas(corpus, query, det_cols, dep_col, min_support):
+    """The same facts via a MATERIALIZED pandas join + groupby: Q ⋈ T under
+    every injective column mapping, concatenated, then nunique(dep) per
+    determinant group — the computation ``discover_fds`` exists to avoid."""
+    width = len(det_cols)
+    dcols = [f"d{i}" for i in range(width)]
+    qdf = pd.DataFrame({
+        dcols[i]: [row[c] for row in query.cells]
+        for i, c in enumerate(det_cols)
+    })
+    qdf["dep"] = [row[dep_col] for row in query.cells]
+    out = {}
+    for t in corpus.tables:
+        if t.n_cols < width or t.n_rows == 0:
+            continue
+        tdf = pd.DataFrame(t.cells, columns=[f"c{j}" for j in range(t.n_cols)])
+        frames = []
+        for mapping in itertools.permutations(range(t.n_cols), width):
+            m = qdf.merge(
+                tdf, left_on=dcols,
+                right_on=[f"c{j}" for j in mapping], how="inner",
+            )
+            if len(m):
+                frames.append(m[dcols + ["dep"]])
+        if not frames:
+            continue
+        j = pd.concat(frames).drop_duplicates()
+        support = int(j[dcols].drop_duplicates().shape[0])
+        if support < min_support:
+            continue
+        viol = int((j.groupby(dcols)["dep"].nunique() > 1).sum())
+        out[t.table_id] = (support, viol == 0, viol)
+    return out
+
+
+def _facts(fds):
+    return {c.table_id: (c.support, c.holds, c.violations) for c in fds}
+
+
+def _entry_key(fds):
+    return [dataclasses.astuple(c) for c in fds]
+
+
+# ---------------------------------------------------------------------------
+# Engine vs oracle, every width
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("min_support", (1, 2))
+def test_matches_oracle_at_every_width(bits, seed, min_support):
+    corpus, query, det_cols, dep_col = planted_fd_lake(seed)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=bits))[0]
+    fds, stats = fd.discover_fds(
+        index, query, det_cols, dep_col, min_support=min_support
+    )
+    oracle = fd_oracle_python(corpus, query, det_cols, dep_col, min_support)
+    facts = _facts(fds)
+    assert facts == oracle
+    # zero false negatives, stated explicitly: every oracle table (and in
+    # particular every FD-PRESERVING one) is reported with its exact facts
+    for tid, truth in oracle.items():
+        assert facts[tid] == truth
+    # the counters tell a coherent prune story
+    assert stats.fd_candidates >= stats.fd_validated >= len(fds)
+    assert (stats.fd_bytes_verified > 0) == (stats.fd_validated > 0)
+
+
+def test_count_prune_is_real_and_exact():
+    """min_support=2 must prune candidates BEFORE validation (fewer tables
+    re-gathered than at min_support=1) without changing any reported fact
+    the oracle confirms at that threshold."""
+    corpus, query, det_cols, dep_col = planted_fd_lake(0)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    _, st1 = fd.discover_fds(index, query, det_cols, dep_col, min_support=1)
+    fds2, st2 = fd.discover_fds(index, query, det_cols, dep_col, min_support=2)
+    assert st2.fd_candidates == st1.fd_candidates
+    assert st2.fd_validated < st1.fd_validated
+    assert st2.fd_bytes_verified < st1.fd_bytes_verified
+    assert _facts(fds2) == fd_oracle_python(corpus, query, det_cols, dep_col, 2)
+
+
+def test_no_matches_yields_empty():
+    corpus, _q, det_cols, dep_col = planted_fd_lake(0)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    stranger = Table(-1, [["no-such-a", "no-such-b", "dep"]])
+    fds, stats = fd.discover_fds(index, stranger, det_cols, dep_col)
+    assert fds == [] and stats.fd_candidates == stats.fd_validated == 0
+
+
+def test_trivial_fd_rejected():
+    corpus, query, det_cols, _dep = planted_fd_lake(0)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    with pytest.raises(ValueError, match="trivial"):
+        fd.discover_fds(index, query, det_cols, det_cols[0])
+
+
+@pytest.mark.skipif(not HAVE_PANDAS, reason="pandas not installed")
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("min_support", (1, 2))
+def test_oracles_agree(seed, min_support):
+    """The pure-python scan and the pandas materialized join+groupby are the
+    same ground truth — so either one anchors the engine tests."""
+    corpus, query, det_cols, dep_col = planted_fd_lake(seed)
+    assert fd_oracle_python(
+        corpus, query, det_cols, dep_col, min_support
+    ) == fd_oracle_pandas(corpus, query, det_cols, dep_col, min_support)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_random_lakes_match_oracle(seed):
+    """Hypothesis-widened seed net at 128 bits (the FP-heaviest width:
+    most survivors reach validation, the hardest case for exactness)."""
+    corpus, query, det_cols, dep_col = planted_fd_lake(seed)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    for min_support in (1, 2):
+        fds, _ = fd.discover_fds(
+            index, query, det_cols, dep_col, min_support=min_support
+        )
+        assert _facts(fds) == fd_oracle_python(
+            corpus, query, det_cols, dep_col, min_support
+        )
+
+
+# ---------------------------------------------------------------------------
+# Routed lake: bit-identical at {1,2,4,8} shards × every width
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_routed_bit_identical(bits, n_shards):
+    corpus, query, det_cols, dep_col = planted_fd_lake(1)
+    cfg = xash.XashConfig(bits=bits)
+    global_idx = build_index(corpus, cfg=cfg)[0]
+    routed_idx, _ = build_routed_index(corpus, cfg=cfg, n_shards=n_shards)
+    ref, _ = fd.discover_fds(global_idx, query, det_cols, dep_col)
+    got, stats = fd.discover_fds(routed_idx, query, det_cols, dep_col)
+    assert _entry_key(got) == _entry_key(ref)  # bit-identical sequence
+    if n_shards > 1:
+        # the routed validation re-gathers from owning shards — same bytes
+        assert stats.fd_bytes_verified > 0
+
+
+# ---------------------------------------------------------------------------
+# Epoch pinning, session threading, signals
+# ---------------------------------------------------------------------------
+
+def test_stale_plancounts_raises():
+    """A §5.4 mutation between the filter launch and validation must raise:
+    the re-gather would read rows the filter never probed."""
+    corpus, query, det_cols, dep_col = planted_fd_lake(0)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    [pc] = batched.plan_and_count(index, [(query, det_cols)])
+    index.insert_table([["mutant", "row"]])
+    with pytest.raises(ValueError, match="stale"):
+        fd.fds_from_counts(index, pc, dep_col)
+
+
+def test_session_threads_config_and_absorbs_stats():
+    corpus, query, det_cols, dep_col = planted_fd_lake(2)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    session = MateSession(index)
+    fds, stats = session.discover_fds(query, det_cols, dep_col, min_support=1)
+    assert _facts(fds) == fd_oracle_python(corpus, query, det_cols, dep_col, 1)
+    assert session.stats.requests == 1
+    assert session.stats.fd_candidates == stats.fd_candidates > 0
+    assert session.stats.fd_validated == stats.fd_validated > 0
+    assert session.stats.fd_bytes_verified == stats.fd_bytes_verified > 0
+
+
+def test_signals_only_reorder_never_change_facts():
+    corpus, query, det_cols, dep_col = planted_fd_lake(0)
+    index = build_index(corpus, cfg=xash.XashConfig(bits=128))[0]
+    plain, _ = fd.discover_fds(index, query, det_cols, dep_col)
+    session = MateSession(index, DiscoveryConfig(signals=fd.DEFAULT_SIGNALS))
+    scored, _ = session.discover_fds(query, det_cols, dep_col)
+    assert _facts(scored) == _facts(plain)
+    assert all(c.score is not None for c in scored)
+    assert all(c.score is None for c in plain)
+    # the declared order: descending ensemble score
+    svals = [c.score for c in scored]
+    assert svals == sorted(svals, reverse=True)
+
+
+@pytest.mark.parametrize("bad", [
+    [("joinability", 1.0)],            # list: unhashable for a frozen config
+    (("bogus", 1.0),),                 # unknown signal name
+    (("joinability", 0.0),),           # non-positive weight
+    (("joinability",),),               # malformed pair
+])
+def test_config_rejects_malformed_signals(bad):
+    with pytest.raises(ValueError):
+        DiscoveryConfig(signals=bad)

@@ -7,10 +7,9 @@ rows, and NO width may ever reject an exact match (§6.3 lemma).
 
 import pytest
 
-from repro.core import xash
 from repro.core.batched import discover_batched, filter_outcomes
-from repro.core.index import MateIndex
-from repro.data import synthetic
+
+from conftest import mixed_query_lake, indexes_at_widths
 
 WIDTHS = (128, 256, 512)
 
@@ -21,12 +20,13 @@ def fp_lake():
     different tables, so single columns hit many posting lists while full
     composite keys rarely exist (the paper's sensor-data regime).
     One index per width, shared by every test in this module."""
-    corpus = synthetic.make_corpus(synthetic.SyntheticSpec(n_tables=120, seed=7))
-    queries = synthetic.make_mixed_queries(corpus, 4, 20, 2, seed=11)
+    corpus, queries = mixed_query_lake(
+        n_tables=120, corpus_seed=7, n_queries=4, n_rows=20, key_width=2,
+        query_seed=11,
+    )
     assert queries
-    indexes = {
-        bits: MateIndex(corpus, cfg=xash.XashConfig(bits=bits)) for bits in WIDTHS
-    }
+    # lazy-profile indexes (built=False): this module never ranks or gates
+    indexes = indexes_at_widths(corpus, WIDTHS, built=False)
     outcomes = {}
     for bits, index in indexes.items():
         agg = {"checks": 0, "passed": 0, "tp": 0, "fp": 0, "fn": 0}

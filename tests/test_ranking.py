@@ -60,26 +60,20 @@ from repro.data import synthetic
 from repro.serve.cache import query_fingerprint
 from repro.serve.engine import DiscoveryEngine
 
-ALL_BITS = (128, 256, 512)
+from conftest import ALL_BITS, ground_truth_lake, indexes_at_widths
 
 
 @pytest.fixture(scope="module")
 def lake():
-    spec = synthetic.SyntheticSpec(n_tables=60, seed=5)
-    corpus = synthetic.make_corpus(spec)
-    query, q_cols, expected, corpus = synthetic.make_query_with_ground_truth(
-        corpus, n_rows=25, key_width=2, seed=7
+    return ground_truth_lake(
+        n_tables=60, corpus_seed=5, n_rows=25, key_width=2, query_seed=7
     )
-    return corpus, query, q_cols, expected
 
 
 @pytest.fixture(scope="module")
 def built(lake):
     corpus, _q, _qc, _e = lake
-    return {
-        bits: build_index(corpus, cfg=xash.XashConfig(bits=bits))[0]
-        for bits in ALL_BITS
-    }
+    return indexes_at_widths(corpus)
 
 
 def _key(entries):

@@ -679,3 +679,88 @@ if HAVE_HYPOTHESIS:
         warm = eng.discover(q, qc, k=k2)
         assert session.stats.bound_hits == 1
         assert _key(warm.results) == _cold(index, q, qc, k=k2)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: degrade × profile-gate × cache hygiene, and the FD-workload
+# fingerprint split
+# ---------------------------------------------------------------------------
+
+def test_degraded_gated_request_exact_and_never_poisons_bound_cache(built, lake):
+    """A degraded (128-bit lane-prefix) admission with the profile gate ON
+    must still verify to exactly the cold full-width gated answer, and its
+    phase-A bounds must NEVER enter the BoundCache (they are looser by
+    design: a hot entry would keep replaying the wide survivor set long
+    after the pressure spike ended).  The exact post-verification RESULTS
+    may be cached — a replay is bit-identical."""
+    _, queries = lake
+    clk = ManualClock()
+    eng, session = _engine(
+        built[512], clk.now, window=8, max_queue=1,
+        pressure_policy="degrade", degrade_bits=128,
+        result_cache=8, bound_cache=8,
+    )
+    normal = eng.submit(*queries[0])
+    degraded = eng.submit(*queries[1])  # queue at max_queue → degraded
+    assert degraded.degraded and not normal.degraded
+    eng.flush()
+    epoch = built[512].mutation_epoch
+    # gate on (session default) + 4-lane prefix filtering: the verified SET
+    # is still exactly the cold 512-bit gated answer (order may differ —
+    # the quality score's containment term reads the looser prefix counts)
+    assert degraded.stats.filter_lanes == 4
+    assert sorted(_key(degraded.results)) == sorted(_cold(built[512], *queries[1]))
+    # bound-cache hygiene: the full-width request's bounds were cached, the
+    # degraded request's were not
+    assert eng.bound_cache.get(normal.fingerprint, epoch) is not None
+    assert eng.bound_cache.get(degraded.fingerprint, epoch) is None
+    # the RESULT cache did keep the degraded answer — it is exact after
+    # verification, so a replay must be bit-identical to the cold answer
+    hit = eng.submit(*queries[1])
+    assert hit.from_cache and session.stats.cache_hits == 1
+    assert sorted(_key(hit.results)) == sorted(_cold(built[512], *queries[1]))
+    # ... and the replay resolves at submit: no queue slot, no filter work
+    assert hit not in eng.queue
+
+
+def test_fd_workload_fingerprint_never_hits_join_caches(built, lake):
+    """FD validation re-uses plan_and_count, so an FD request's fingerprint
+    MUST differ from the join-workload fingerprint of the same query —
+    otherwise an FD pass could replay a cached join result (or vice versa).
+    The ``workload`` field pins the split; the default stays 'join' so
+    every pre-FD digest is unchanged."""
+    _, queries = lake
+    q, qc = queries[0]
+    cfg = DiscoveryConfig()
+    join_fp = query_fingerprint(
+        q, qc, cfg.init_mode, rank=cfg.rank, profile_gate=cfg.profile_gate
+    )
+    # default == explicit workload='join' (pre-FD digests unchanged)
+    assert join_fp == query_fingerprint(
+        q, qc, cfg.init_mode, rank=cfg.rank, profile_gate=cfg.profile_gate,
+        workload="join",
+    )
+    # distinct workloads → distinct digests; FD callers encode the dependent
+    # column and min_support so different FD targets never collide either
+    fd_fp = query_fingerprint(
+        q, qc, cfg.init_mode, rank=cfg.rank, profile_gate=cfg.profile_gate,
+        workload="fd:2:1",
+    )
+    assert fd_fp != join_fp
+    assert fd_fp != query_fingerprint(
+        q, qc, cfg.init_mode, rank=cfg.rank, profile_gate=cfg.profile_gate,
+        workload="fd:3:1",
+    )
+    # engine integration: warm the join result cache, then assert the FD
+    # fingerprint misses both caches at every k
+    clk = ManualClock()
+    eng, session = _engine(
+        built[128], clk.now, window=4, flush_after=None,
+        result_cache=8, bound_cache=8,
+    )
+    cold = eng.discover(q, qc)
+    assert eng.discover(q, qc).from_cache  # join entry is hot
+    epoch = built[128].mutation_epoch
+    assert eng.result_cache.get(cold.fingerprint, cold.k, epoch) is not None
+    assert eng.result_cache.get(fd_fp, cold.k, epoch) is None
+    assert eng.bound_cache.get(fd_fp, epoch) is None
